@@ -1,0 +1,37 @@
+"""Paper Fig. 9/12/15: most relevant input+hardware features per kernel,
+grouped into the paper's reporting buckets, compared across platforms
+(§3.5's correlation-vs-causation escape: features present on every platform
+are algorithm-intrinsic)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import (PLATFORMS, build_slice, characterize_slice,
+                        compare_platforms, corpus, grouped_importance)
+from .common import FULL, Row
+
+TREE_KW = dict(max_depth=24, min_samples_leaf=1, min_samples_split=2)
+
+
+def run() -> List[Row]:
+    mats = corpus(n_matrices=180 if FULL else 90, n_min=384,
+                  n_max=2048, seed=1)
+    rows: List[Row] = []
+    results = []
+    for kernel in ("spmv", "spgemm", "spadd"):
+        for plat in PLATFORMS.values():
+            data = build_slice(kernel, mats, plat)
+            res = characterize_slice(data, "gflops", k=4, **TREE_KW)
+            results.append(res)
+            g = grouped_importance(res)
+            top3 = ";".join(f"{n}={v:.2f}" for n, v in res.importances[:3])
+            rows.append((f"fig9_12_15/{kernel}/{plat.name}", 0.0,
+                         f"top3[{top3}];groups["
+                         + ";".join(f"{k}={v:.2f}" for k, v in g.items())
+                         + "]"))
+    cmp = compare_platforms(results, top=5)
+    for kern, d in cmp.items():
+        rows.append((f"fig9_12_15/cross_platform/{kern}", 0.0,
+                     f"intrinsic={','.join(d['algorithm_intrinsic']) or '-'};"
+                     f"arch_induced={','.join(d['architecture_induced']) or '-'}"))
+    return rows

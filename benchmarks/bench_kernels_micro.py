@@ -1,0 +1,55 @@
+"""Wall-clock microbenchmarks of the five kernels (jnp backend on CPU;
+the Pallas TPU schedules are exercised in interpret mode by tests)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR
+from repro.kernels import (bsr_spadd, bsr_spgemm, bsr_spmv, flash_attention,
+                           moe_gmm)
+from .common import FULL, Row, time_call
+
+RNG = np.random.default_rng(0)
+
+
+def _sparse(n, density=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    return CSR.from_dense(d.astype(np.float32))
+
+
+def run() -> List[Row]:
+    n = 2048 if FULL else 512
+    rows: List[Row] = []
+    A, B = _sparse(n, seed=1), _sparse(n, seed=2)
+    x = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+
+    ell = bsr_spmv.ops.prepare(A, 128)
+    us = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(ell, x, backend="jnp")))
+    rows.append(("kernels/bsr_spmv", us,
+                 f"n={n};nnz={A.nnz};gflops={2*A.nnz/us/1e3:.2f}"))
+
+    us = time_call(lambda: bsr_spadd.bsr_spadd(A, B, 64, backend="jnp"))
+    rows.append(("kernels/bsr_spadd", us, f"n={n}"))
+
+    us = time_call(lambda: bsr_spgemm.bsr_spgemm(A, B, 64, backend="jnp"))
+    rows.append(("kernels/bsr_spgemm", us, f"n={n}"))
+
+    T, K, N, E = 512, 128, 256, 8
+    toks = RNG.standard_normal((T, K)).astype(np.float32)
+    eot = RNG.integers(0, E, T)
+    xq, te, _ = moe_gmm.route_and_pad(toks, eot, E, tile_m=128)
+    w = jnp.asarray(RNG.standard_normal((E, K, N)), jnp.float32)
+    us = time_call(lambda: np.asarray(moe_gmm.moe_gmm(
+        jnp.asarray(te), jnp.asarray(xq), w, backend="jnp")))
+    rows.append(("kernels/moe_gmm", us, f"T={T};E={E}"))
+
+    S, D = 512, 64
+    q = jnp.asarray(RNG.standard_normal((4, S, D)), jnp.float32)
+    us = time_call(lambda: np.asarray(flash_attention.flash_attention(
+        q, q, q, backend="jnp")))
+    rows.append(("kernels/flash_attention_ref", us, f"S={S};D={D}"))
+    return rows

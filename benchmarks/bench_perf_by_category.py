@@ -1,0 +1,47 @@
+"""Paper Fig. 10/13/17: kernel performance per matrix category per platform
+(modeled GFLOPS from the schedule simulation + roofline machine model)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import List
+
+import numpy as np
+
+from repro.core import (PLATFORMS, corpus, run_spadd_model, run_spgemm_model,
+                        run_spmv_model)
+from .common import FULL, Row
+
+KERNELS = {
+    "spmv": lambda A, p: run_spmv_model(A, p),
+    "spgemm": lambda A, p: run_spgemm_model(A, A, p),
+    "spadd": lambda A, p: run_spadd_model(A, A.transpose(), p),
+}
+
+
+def run() -> List[Row]:
+    mats = corpus(n_matrices=90 if FULL else 45, n_min=384, n_max=1536,
+                  seed=2, include_synthetic=False)
+    rows: List[Row] = []
+    perf = defaultdict(list)
+    for kern, fn in KERNELS.items():
+        for plat in PLATFORMS.values():
+            for name, domain, A in mats:
+                _, _, tg = fn(A, plat)
+                perf[(kern, plat.name, domain)].append(tg["gflops"])
+    domains = sorted({k[2] for k in perf})
+    for kern in KERNELS:
+        for plat in PLATFORMS.values():
+            vals = {d: float(np.median(perf[(kern, plat.name, d)]))
+                    for d in domains if (kern, plat.name, d) in perf}
+            rows.append((f"fig10_13_17/{kern}/{plat.name}", 0.0,
+                         ";".join(f"{d}={v:.1f}gf" for d, v in vals.items())))
+    # paper claim (Fig. 17): SpADD favors bandwidth/prefetch platforms
+    from repro.core import TPU_V4, TPU_V5P
+    mean_v4 = np.mean([np.median(perf[("spadd", "tpu_v4", d)])
+                       for d in domains])
+    mean_v5p = np.mean([np.median(perf[("spadd", "tpu_v5p", d)])
+                        for d in domains])
+    rows.append(("fig17/spadd_bandwidth_claim", 0.0,
+                 f"v4={mean_v4:.1f}gf;v5p={mean_v5p:.1f}gf;"
+                 f"higher_bw_wins={mean_v5p >= mean_v4}"))
+    return rows

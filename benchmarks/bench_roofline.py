@@ -1,0 +1,51 @@
+"""§Roofline: the per-(arch x shape) three-term table read from the dry-run
+reports (single-pod for the table; multi-pod status column proves the pod
+axis shards). Run launch/dryrun.py --all --both-meshes first."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from .common import Row
+
+REPORT_DIR = Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    if not REPORT_DIR.exists():
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --both-meshes")]
+    cells = {}
+    for p in sorted(REPORT_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    n_ok = n_skip = n_fail = 0
+    for (arch, shape, mesh), d in sorted(cells.items()):
+        if mesh != "16x16":
+            continue
+        mp = cells.get((arch, shape, "2x16x16"), {})
+        mp_status = mp.get("status", "missing")[:7]
+        if d["status"].startswith("skipped"):
+            n_skip += 1
+            rows.append((f"roofline/{arch}/{shape}", 0.0,
+                         f"status=skipped;multi_pod={mp_status}"))
+            continue
+        if d["status"] != "ok":
+            n_fail += 1
+            rows.append((f"roofline/{arch}/{shape}", 0.0,
+                         f"status=FAILED;multi_pod={mp_status}"))
+            continue
+        n_ok += 1
+        t = d["terms"]
+        rows.append((
+            f"roofline/{arch}/{shape}", d["compile_seconds"] * 1e6,
+            f"C={t['compute_s']:.3e}s;M={t['memory_s']:.3e}s;"
+            f"X={t['collective_s']:.3e}s;bottleneck={d['bottleneck']};"
+            f"useful={d['useful_ratio']:.2f};rf={d['roofline_fraction']:.3f};"
+            f"mem/dev={d['memory']['per_device_total']/2**30:.1f}GiB;"
+            f"multi_pod={mp_status}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={n_ok};skipped={n_skip};failed={n_fail}"))
+    return rows

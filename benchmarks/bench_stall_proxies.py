@@ -1,0 +1,54 @@
+"""Paper Fig. 7 + Fig. 8 (+11/14/16): frontend/backend stall analogue per
+(kernel x synthetic category x platform).
+
+TPU mapping (DESIGN.md §2): 'frontend' stalls (issue-side bubbles from
+data-dependent branches) -> irregularity/launch term; 'backend' stalls
+(memory waits) -> max(memory, latency) wait beyond compute. The paper's
+qualitative claims checked here:
+  * SpADD's frontend fraction is high and structure-insensitive (Fig. 7);
+  * SpMV/SpGEMM backend fractions dominate unless locality is high (Fig. 8);
+  * regular categories (column/row/stride/temporal) stall less in frontend.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (GENERATORS, TPU_V5E, run_spadd_model,
+                        run_spgemm_model, run_spmv_model, stall_breakdown)
+from .common import FULL, Row
+
+KERNELS = {
+    "spmv": lambda A, p: run_spmv_model(A, p),
+    "spgemm": lambda A, p: run_spgemm_model(A, A, p),
+    "spadd": lambda A, p: run_spadd_model(A, A.transpose(), p),
+}
+
+
+def run(n: int = 0) -> List[Row]:
+    n = n or (1024 if FULL else 384)
+    rows: List[Row] = []
+    frac = {}
+    for kern, fn in KERNELS.items():
+        for cat, gen in GENERATORS.items():
+            A = gen(n, seed=5)
+            _, times, _ = fn(A, TPU_V5E)
+            sb = stall_breakdown(times)
+            frac[(kern, cat)] = sb
+            rows.append((f"fig7_8/stalls/{kern}/{cat}", 0.0,
+                         f"frontend={sb['frontend_stall_frac']:.3f};"
+                         f"backend={sb['backend_stall_frac']:.3f};"
+                         f"bound={times['bound']}"))
+    # qualitative checks
+    spadd_fe = np.mean([frac[("spadd", c)]["frontend_stall_frac"]
+                        for c in GENERATORS])
+    spmv_be_rand = np.mean([frac[("spmv", c)]["backend_stall_frac"]
+                            for c in ("uniform", "normal", "exponential")])
+    spmv_be_reg = frac[("spmv", "column")]["backend_stall_frac"]
+    rows.append(("fig7_8/claims", 0.0,
+                 f"spadd_mean_frontend={spadd_fe:.3f};"
+                 f"spmv_backend_random={spmv_be_rand:.3f};"
+                 f"spmv_backend_column={spmv_be_reg:.3f};"
+                 f"random_exceeds_regular={spmv_be_rand >= spmv_be_reg}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Table 2 / Fig. 3: metric distributions across the 9 synthetic
+categories, with quartile-band labels compared against the published table."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import (GENERATORS, TABLE2, branch_entropy, index_affinity,
+                        reuse_affinity, thread_imbalance)
+from .common import FULL, Row, time_call
+
+BANDS = ["LOW", "AVERAGE", "HIGH"]
+
+
+def run(n: int = 0) -> List[Row]:
+    n = n or (2048 if FULL else 512)
+    rows: List[Row] = []
+    metrics = {}
+    for cat, gen in GENERATORS.items():
+        A = gen(n, seed=3)
+        us = time_call(lambda: (reuse_affinity(A), index_affinity(A),
+                                branch_entropy(A), thread_imbalance(A, 16)),
+                       repeats=1)
+        metrics[cat] = (reuse_affinity(A), index_affinity(A),
+                        thread_imbalance(A, 16), branch_entropy(A))
+        rows.append((f"table2/metrics/{cat}", us,
+                     "temporal={:.2f};spatial={:.2f};imbalance={:.2f};"
+                     "entropy={:.2f}".format(*metrics[cat])))
+    # quartile-band agreement with Table 2
+    agree = exact = 0
+    for ci in range(4):
+        vals = np.array([metrics[c][ci] for c in GENERATORS])
+        q1, q3 = np.quantile(vals, 0.25), np.quantile(vals, 0.75)
+        eps = 1e-9 + 1e-6 * (vals.max() - vals.min())
+        for cat in GENERATORS:
+            v = metrics[cat][ci]
+            got = 0 if v <= q1 + eps else (2 if v > q3 + eps else 1)
+            want = BANDS.index(TABLE2[cat][ci])
+            agree += abs(got - want) <= 1
+            exact += got == want
+    total = 4 * len(GENERATORS)
+    rows.append(("table2/band_agreement", 0.0,
+                 f"exact={exact}/{total};within_one_band={agree}/{total}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+              **kw) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + the roofline table.
+Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_FULL=1 for the
+paper-scale corpus (600 matrices)."""
+import sys
+import time
+import traceback
+
+from . import (bench_synthetic_categories, bench_thread_imbalance,
+               bench_tree_mape, bench_stall_proxies, bench_importances,
+               bench_perf_by_category, bench_kernel_hillclimb,
+               bench_kernels_micro, bench_roofline)
+
+MODULES = [
+    ("table2_fig3", bench_synthetic_categories),
+    ("fig4", bench_thread_imbalance),
+    ("fig5_fig6", bench_tree_mape),
+    ("fig7_fig8", bench_stall_proxies),
+    ("fig9_12_15", bench_importances),
+    ("fig10_13_17", bench_perf_by_category),
+    ("hillclimb_2.63x", bench_kernel_hillclimb),
+    ("kernels_micro", bench_kernels_micro),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        for r_name, us, derived in rows:
+            print(f"{r_name},{us:.1f},{derived}")
+        print(f"{name}/elapsed,{(time.time()-t0)*1e6:.0f},-")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Characterize a user matrix and pick kernel schedules for it — the
+"characterization loop" as a user-facing tool (paper §6 goal: help HW/SW
+designers map architectural features to inputs/algorithms).
+
+Run:  PYTHONPATH=src python examples/characterize.py [--category uniform]
+"""
+import argparse
+
+from repro.core import (GENERATORS, PLATFORMS, ScheduleTuner, characterize,
+                        corpus, run_spadd_model, run_spgemm_model,
+                        run_spmv_model, stall_breakdown)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--category", default="exponential",
+                    choices=sorted(GENERATORS))
+    ap.add_argument("--n", type=int, default=2048)
+    args = ap.parse_args()
+
+    A = GENERATORS[args.category](args.n, seed=0)
+    print(f"matrix: {args.category} n={args.n} nnz={A.nnz}")
+    print("\nstatic metrics (paper Eq. 1-6):")
+    for k, v in characterize(A).items():
+        print(f"  {k:22s} {v:10.4f}")
+
+    print("\nper-platform kernel forecast (modeled):")
+    print(f"  {'kernel':8s} {'platform':9s} {'GFLOPS':>8s} {'bound':>8s} "
+          f"{'frontend%':>10s} {'backend%':>9s}")
+    for kern, fn in (("spmv", lambda p: run_spmv_model(A, p)),
+                     ("spgemm", lambda p: run_spgemm_model(A, A, p)),
+                     ("spadd", lambda p: run_spadd_model(A, A.transpose(), p))):
+        for plat in PLATFORMS.values():
+            c, t, tg = fn(plat)
+            sb = stall_breakdown(t)
+            print(f"  {kern:8s} {plat.name:9s} {tg['gflops']:8.1f} "
+                  f"{t['bound']:>8s} {100*sb['frontend_stall_frac']:9.1f}% "
+                  f"{100*sb['backend_stall_frac']:8.1f}%")
+
+    print("\nloop-driven schedule selection (SpMV):")
+    mats = corpus(n_matrices=27, n_min=384, n_max=1024, seed=1)
+    for plat in PLATFORMS.values():
+        tuner = ScheduleTuner("spmv", plat).fit(mats, max_mats=16)
+        sched, info = tuner.select(A)
+        print(f"  {plat.name:9s} -> backend={sched.backend} "
+              f"block={sched.block_size} ell_q={sched.ell_quantile} "
+              f"t={info.get('verified_time_s', 0):.3e}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Serve a small model with batched requests (deliverable (b), serving
+flavor): prefill + decode loop with batching, latency stats, and the
+SpChar-driven MoE path demonstrated on a mixtral-family reduced config.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+"""
+import argparse
+
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+from repro.core import TPU_V5E, select_moe_block_size
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    res = serve_main(["--arch", args.arch, "--reduced",
+                      "--requests", str(args.requests), "--batch", "4",
+                      "--prompt-len", "64", "--gen-len", "16",
+                      "--attn-chunk", "32"])
+    print(f"throughput: {res['throughput_tok_s']:.1f} tok/s")
+
+    # SpChar integration demo: the MoE grouped-GEMM tile size chosen from
+    # the Eq. 5 imbalance of a routing histogram.
+    for routing in (np.full(8, 100.0), np.array([600.] + [10.] * 7)):
+        bs = select_moe_block_size(routing, 512, TPU_V5E)
+        print(f"routing counts {routing.astype(int).tolist()} -> "
+              f"moe_gmm tile_m={bs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Characterization-loop-driven kernel autotuning (DESIGN.md §4 point 1).
+
+The paper's motivation for tree models over simulators: "estimate the
+performance and impact of an architectural change *quickly*" (§1). We close
+the loop: a tree trained on (static metrics + candidate schedule params) ->
+modeled time becomes a microsecond-scale cost model; at run time we sweep
+the candidate schedules through the tree and pick the argmin — optionally
+verifying the winner with the full schedule simulation.
+
+Used by models/moe.py (block size / backend choice for expert GEMMs) and by
+examples/characterize.py for user matrices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .csr import CSR
+from . import metrics as metrics_mod
+from .decision_tree import DecisionTreeRegressor
+from .dataset import Matrix
+from .perfmodel import run_spmv_model, run_spgemm_model, run_spadd_model
+from .platforms import Platform
+
+BLOCK_SIZES = (32, 64, 128, 256)
+ELL_QUANTILES = (0.8, 0.95, 1.0)
+DENSE_DENSITY_THRESHOLD = 0.25  # above this, a dense matmul wins trivially
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    backend: str          # "dense" | "bsr"
+    block_size: int
+    ell_quantile: float
+
+    def as_features(self) -> List[float]:
+        return [float(self.block_size), float(self.ell_quantile)]
+
+
+def candidate_schedules() -> List[Schedule]:
+    return [Schedule("bsr", bs, q)
+            for bs, q in itertools.product(BLOCK_SIZES, ELL_QUANTILES)]
+
+
+def _modeled_time(kernel: str, A: CSR, platform: Platform, sched: Schedule) -> float:
+    if kernel == "spmv":
+        _, t, _ = run_spmv_model(A, platform, sched.block_size, sched.ell_quantile)
+    elif kernel == "spgemm":
+        _, t, _ = run_spgemm_model(A, A, platform, sched.block_size)
+    else:
+        B = A.transpose() if A.shape[0] == A.shape[1] else A
+        _, t, _ = run_spadd_model(A, B, platform, sched.block_size)
+    return t["t_total"]
+
+
+class ScheduleTuner:
+    """Tree-backed cost model over (matrix metrics, schedule params)."""
+
+    def __init__(self, kernel: str, platform: Platform) -> None:
+        self.kernel = kernel
+        self.platform = platform
+        self.tree: Optional[DecisionTreeRegressor] = None
+        self.feature_names: List[str] = []
+
+    def fit(self, mats: Sequence[Matrix], max_mats: int = 64, seed: int = 0
+            ) -> "ScheduleTuner":
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(len(mats))[:max_mats]
+        rows, ys = [], []
+        feature_names: Optional[List[str]] = None
+        for i in idx:
+            _, _, A = mats[int(i)]
+            static = metrics_mod.characterize(A)
+            if feature_names is None:
+                feature_names = list(static) + ["cfg_block_size", "cfg_ell_quantile"]
+            base = [static[k] for k in list(static)]
+            for sched in candidate_schedules():
+                rows.append(base + sched.as_features())
+                ys.append(np.log10(max(_modeled_time(self.kernel, A, self.platform,
+                                                     sched), 1e-12)))
+        self.feature_names = feature_names or []
+        self.tree = DecisionTreeRegressor(max_depth=14).fit(
+            np.asarray(rows), np.asarray(ys))
+        return self
+
+    def predict_time(self, static: Dict[str, float], sched: Schedule) -> float:
+        assert self.tree is not None, "call fit() first"
+        x = [static[k] for k in self.feature_names[:-2]] + sched.as_features()
+        return float(10 ** self.tree.predict(np.asarray([x]))[0])
+
+    def select(self, A: CSR, verify_top: int = 2) -> Tuple[Schedule, Dict[str, float]]:
+        """Pick the best schedule for ``A``; verify top candidates by simulation."""
+        if A.density() > DENSE_DENSITY_THRESHOLD:
+            return Schedule("dense", 128, 1.0), {"reason": 1.0}
+        static = metrics_mod.characterize(A)
+        scored = sorted(
+            ((self.predict_time(static, s), s) for s in candidate_schedules()),
+            key=lambda p: p[0])
+        best_t, best_s = scored[0]
+        # verification pass on the top candidates (tree is approximate)
+        verified = [(_modeled_time(self.kernel, A, self.platform, s), s)
+                    for _, s in scored[:verify_top]]
+        verified.sort(key=lambda p: p[0])
+        vt, vs = verified[0]
+        return vs, {"tree_time_s": best_t, "verified_time_s": vt}
+
+
+def select_moe_block_size(tokens_per_expert: np.ndarray, d_model: int,
+                          platform: Platform) -> int:
+    """MoE grouped-GEMM tile choice from the imbalance metric (Eq. 5 reuse).
+
+    High expert imbalance -> smaller tiles waste less on ragged group tails;
+    balanced routing -> full MXU tiles. This mirrors the paper's finding that
+    imbalance is the limiting factor for partitioned sparse work.
+    """
+    imb = metrics_mod.partition_imbalance(tokens_per_expert.astype(np.float64),
+                                          max(len(tokens_per_expert), 1))
+    if imb > 1.0:
+        return 64
+    if imb > 0.5:
+        return 128
+    return 256

@@ -1,0 +1,227 @@
+"""Sparse matrix containers: CSR (paper interchange format), BSR and ELL-BSR.
+
+CSR is the paper's format (Fig. 1): ``row_ptrs`` / ``col_idxs`` / ``nnz_vals``.
+BSR/ELL-BSR are the TPU-native blocked layouts our Pallas kernels consume
+(DESIGN.md §2): TPU has no efficient scalar gather, so the MXU-aligned block
+schedule *is* the paper's §4.4 "ELL / 2D-blocked format" recommendation.
+
+Containers are plain numpy on the host (construction/characterization side)
+with ``jax_arrays()`` exporters for device-side kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed Sparse Row matrix (paper §2.1.1)."""
+
+    row_ptrs: np.ndarray  # (n_rows + 1,) uint32/int64
+    col_idxs: np.ndarray  # (nnz,) uint32
+    nnz_vals: np.ndarray  # (nnz,) float32
+    shape: Tuple[int, int]
+
+    def __post_init__(self) -> None:
+        self.row_ptrs = np.asarray(self.row_ptrs)
+        self.col_idxs = np.asarray(self.col_idxs)
+        self.nnz_vals = np.asarray(self.nnz_vals)
+        if self.row_ptrs.ndim != 1 or self.row_ptrs.shape[0] != self.shape[0] + 1:
+            raise ValueError("row_ptrs must have shape (n_rows + 1,)")
+        if self.col_idxs.shape != self.nnz_vals.shape:
+            raise ValueError("col_idxs and nnz_vals must align")
+
+    # ---------------------------------------------------------------- basics
+    @property
+    def nnz(self) -> int:
+        return int(self.col_idxs.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.row_ptrs).astype(np.int64)
+
+    def density(self) -> float:
+        return self.nnz / float(self.shape[0] * self.shape[1])
+
+    # ------------------------------------------------------------ conversion
+    @classmethod
+    def from_dense(cls, dense: np.ndarray) -> "CSR":
+        dense = np.asarray(dense)
+        rows, cols = np.nonzero(dense)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        vals = dense[rows, cols].astype(np.float32)
+        row_ptrs = np.zeros(dense.shape[0] + 1, dtype=np.int64)
+        np.add.at(row_ptrs, rows + 1, 1)
+        row_ptrs = np.cumsum(row_ptrs)
+        return cls(row_ptrs, cols.astype(np.uint32), vals, dense.shape)
+
+    @classmethod
+    def from_coo(
+        cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, shape: Tuple[int, int]
+    ) -> "CSR":
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float32)
+        # Deduplicate (last write wins like scipy's sum_duplicates but summed).
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        if rows.size:
+            keep = np.ones(rows.size, dtype=bool)
+            dup = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+            if dup.any():
+                # sum duplicate entries
+                group = np.concatenate([[0], np.cumsum(~dup)])
+                vals = np.bincount(group, weights=vals).astype(np.float32)
+                keep = np.concatenate([[True], ~dup])
+                rows, cols = rows[keep], cols[keep]
+        row_ptrs = np.zeros(shape[0] + 1, dtype=np.int64)
+        np.add.at(row_ptrs, rows + 1, 1)
+        row_ptrs = np.cumsum(row_ptrs)
+        return cls(row_ptrs, cols.astype(np.uint32), vals, shape)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=np.float32)
+        lens = self.row_lengths()
+        rows = np.repeat(np.arange(self.n_rows), lens)
+        np.add.at(out, (rows, self.col_idxs.astype(np.int64)), self.nnz_vals)
+        return out
+
+    def transpose(self) -> "CSR":
+        lens = self.row_lengths()
+        rows = np.repeat(np.arange(self.n_rows), lens)
+        return CSR.from_coo(
+            self.col_idxs.astype(np.int64), rows, self.nnz_vals, (self.n_cols, self.n_rows)
+        )
+
+
+@dataclasses.dataclass
+class BSR:
+    """Block-sparse row matrix: dense (bs x bs) blocks over a coarse CSR.
+
+    ``block_ptrs/block_cols`` index the coarse (block-row, block-col) grid;
+    ``blocks[k]`` is the dense tile for the k-th stored block.
+    """
+
+    block_ptrs: np.ndarray  # (n_block_rows + 1,)
+    block_cols: np.ndarray  # (n_blocks,)
+    blocks: np.ndarray  # (n_blocks, bs, bs) float32
+    shape: Tuple[int, int]  # original (possibly unpadded) shape
+    block_size: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.block_ptrs.shape[0] - 1
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.block_cols.shape[0])
+
+    def blocks_per_row(self) -> np.ndarray:
+        return np.diff(self.block_ptrs).astype(np.int64)
+
+    def padding_fraction(self) -> float:
+        """Fraction of stored block entries that are structural zeros.
+
+        TPU analogue of the paper's branch-misprediction waste (DESIGN.md §2):
+        every stored zero is an MXU lane doing dead work.
+        """
+        stored = self.n_blocks * self.block_size * self.block_size
+        if stored == 0:
+            return 0.0
+        nnz = int(np.count_nonzero(self.blocks))
+        return 1.0 - nnz / stored
+
+    @classmethod
+    def from_csr(cls, csr: CSR, block_size: int) -> "BSR":
+        bs = block_size
+        n_br = -(-csr.n_rows // bs)
+        n_bc = -(-csr.n_cols // bs)
+        lens = csr.row_lengths()
+        rows = np.repeat(np.arange(csr.n_rows), lens)
+        cols = csr.col_idxs.astype(np.int64)
+        brows, bcols = rows // bs, cols // bs
+        # unique (brow, bcol) pairs, row-major order
+        key = brows * n_bc + bcols
+        uniq, inv = np.unique(key, return_inverse=True)
+        blocks = np.zeros((uniq.size, bs, bs), dtype=np.float32)
+        np.add.at(blocks, (inv, rows % bs, cols % bs), csr.nnz_vals)
+        u_brows, u_bcols = uniq // n_bc, uniq % n_bc
+        block_ptrs = np.zeros(n_br + 1, dtype=np.int64)
+        np.add.at(block_ptrs, u_brows + 1, 1)
+        block_ptrs = np.cumsum(block_ptrs)
+        return cls(block_ptrs, u_bcols.astype(np.int32), blocks, csr.shape, bs)
+
+    def to_dense(self) -> np.ndarray:
+        bs = self.block_size
+        n_br = self.n_block_rows
+        n_bc = -(-self.shape[1] // bs)
+        out = np.zeros((n_br * bs, n_bc * bs), dtype=np.float32)
+        for br in range(n_br):
+            for k in range(self.block_ptrs[br], self.block_ptrs[br + 1]):
+                bc = int(self.block_cols[k])
+                out[br * bs : (br + 1) * bs, bc * bs : (bc + 1) * bs] += self.blocks[k]
+        return out[: self.shape[0], : self.shape[1]]
+
+
+@dataclasses.dataclass
+class ELLBSR:
+    """ELL-padded BSR: fixed ``max_blocks`` per block-row (paper §4.4's ELL).
+
+    Regular layout → static Pallas grid. Padding slots point at a shared
+    all-zeros block (index ``n_blocks``), making the schedule branch-free:
+    the paper's data-dependent merge/branch becomes dead-lane compute whose
+    cost is exactly the ``ell_padding_fraction`` counter.
+    """
+
+    block_indices: np.ndarray  # (n_block_rows, max_blocks) int32, padded with n_blocks
+    block_cols: np.ndarray  # (n_block_rows, max_blocks) int32, padded with 0
+    blocks: np.ndarray  # (n_blocks + 1, bs, bs); last block is zeros
+    shape: Tuple[int, int]
+    block_size: int
+    valid_counts: np.ndarray  # (n_block_rows,) int32
+
+    @property
+    def max_blocks(self) -> int:
+        return int(self.block_indices.shape[1])
+
+    def ell_padding_fraction(self) -> float:
+        total = self.block_indices.size
+        valid = int(self.valid_counts.sum())
+        return 1.0 - valid / max(total, 1)
+
+    @classmethod
+    def from_bsr(cls, bsr: BSR, max_blocks: int | None = None) -> "ELLBSR":
+        bpr = bsr.blocks_per_row()
+        mb = int(bpr.max()) if max_blocks is None else int(max_blocks)
+        mb = max(mb, 1)
+        n_br = bsr.n_block_rows
+        zero_idx = bsr.n_blocks
+        block_indices = np.full((n_br, mb), zero_idx, dtype=np.int32)
+        block_cols = np.zeros((n_br, mb), dtype=np.int32)
+        for br in range(n_br):
+            lo, hi = int(bsr.block_ptrs[br]), int(bsr.block_ptrs[br + 1])
+            take = min(hi - lo, mb)
+            block_indices[br, :take] = np.arange(lo, lo + take, dtype=np.int32)
+            block_cols[br, :take] = bsr.block_cols[lo : lo + take]
+        blocks = np.concatenate(
+            [bsr.blocks, np.zeros((1, bsr.block_size, bsr.block_size), np.float32)], axis=0
+        )
+        return cls(
+            block_indices,
+            block_cols,
+            blocks,
+            bsr.shape,
+            bsr.block_size,
+            np.minimum(bpr, mb).astype(np.int32),
+        )

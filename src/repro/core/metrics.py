@@ -1,0 +1,178 @@
+"""Static input metrics from SpChar §3.4 (Eq. 1-6), computed without running
+the kernels.
+
+All metrics operate on host numpy (characterization is a preprocessing step,
+exactly as in the paper) and return floats in [0, 1] except thread imbalance
+which is >= 0.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+import numpy as np
+
+from .csr import CSR
+
+# Paper §3.4: thread imbalance is evaluated for this T sweep.
+THREAD_SWEEP = (2, 4, 16, 32, 48, 64, 128)
+
+
+def branch_entropy(csr: CSR) -> float:
+    """Eq. (1)-(2): normalized entropy of the row-length distribution.
+
+    0 = all rows equal (perfectly predictable inner-loop trip count),
+    1 = maximum-entropy row lengths. On TPU this predicts padded-tile waste
+    of ELL-style schedules rather than branch-miss flushes (DESIGN.md §2).
+    """
+    lengths = csr.row_lengths()
+    if lengths.size == 0:
+        return 0.0
+    values, counts = np.unique(lengths, return_counts=True)
+    n_classes = values.size
+    if n_classes <= 1:
+        return 0.0
+    p = counts / counts.sum()
+    entropy = -np.sum(p * np.log(p))
+    e_max = np.log(n_classes)
+    return float(entropy / e_max)
+
+
+def _lookup_stream(csr: CSR) -> np.ndarray:
+    """The indirectly-accessed index stream (paper: RHS 'lookup' side).
+
+    For SpMV/SpGEMM the scanned LHS has optimal locality by construction, so
+    the paper characterizes only the col_idxs stream that indexes the dense
+    vector / the rows of B.
+    """
+    return csr.col_idxs.astype(np.int64)
+
+
+def mean_reuse_distance(stream: np.ndarray, max_samples: int = 200_000) -> float:
+    """Mean reuse distance (#distinct addresses between reuses) of a stream.
+
+    Exact stack-distance is O(n log n) with a BIT; we use the standard
+    "distinct elements since last access" approximation via a Fenwick tree.
+    Streams longer than ``max_samples`` are uniformly subsampled as in the
+    paper's tooling (metrics must stay cheap relative to kernel runs).
+    """
+    stream = np.asarray(stream, dtype=np.int64)
+    if stream.size == 0:
+        return 0.0
+    if stream.size > max_samples:
+        step = stream.size // max_samples
+        stream = stream[::step]
+    n = stream.size
+    # Fenwick tree over positions marking "most recent access" flags.
+    tree = np.zeros(n + 1, dtype=np.int64)
+
+    def update(i: int, delta: int) -> None:
+        i += 1
+        while i <= n:
+            tree[i] += delta
+            i += i & (-i)
+
+    def query(i: int) -> int:  # prefix sum [0, i]
+        i += 1
+        s = 0
+        while i > 0:
+            s += tree[i]
+            i -= i & (-i)
+        return int(s)
+
+    last_pos: Dict[int, int] = {}
+    total = 0.0
+    n_reuses = 0
+    for pos in range(n):
+        addr = int(stream[pos])
+        prev = last_pos.get(addr)
+        if prev is not None:
+            # distinct addresses touched strictly between prev and pos
+            total += query(pos - 1) - query(prev)
+            n_reuses += 1
+            update(prev, -1)
+        update(pos, +1)
+        last_pos[addr] = pos
+    if n_reuses == 0:
+        return float(n)  # never reused: effectively infinite; clamp to n
+    return total / n_reuses
+
+
+def mean_index_distance(stream: np.ndarray, max_samples: int = 1_000_000) -> float:
+    """Mean |idx[i+1] - idx[i]| of consecutively accessed indices (spatial)."""
+    stream = np.asarray(stream, dtype=np.int64)
+    if stream.size < 2:
+        return 0.0
+    if stream.size > max_samples:
+        step = stream.size // max_samples
+        stream = stream[::step]
+    return float(np.mean(np.abs(np.diff(stream))))
+
+
+def reuse_affinity(csr: CSR) -> float:
+    """Eq. (3): 1 / log10(10 + reuse_distance) in (0, 1]."""
+    rd = mean_reuse_distance(_lookup_stream(csr))
+    return float(1.0 / np.log10(10.0 + rd))
+
+
+def index_affinity(csr: CSR) -> float:
+    """Eq. (4): 1 / log10(10 + index_distance) in (0, 1]."""
+    idist = mean_index_distance(_lookup_stream(csr))
+    return float(1.0 / np.log10(10.0 + idist))
+
+
+def thread_imbalance(csr: CSR, n_threads: int) -> float:
+    """Eq. (5)-(6): row-wise partition imbalance for ``n_threads`` shards.
+
+    Rows are split into T contiguous chunks (Fig. 1 partitioning); the metric
+    is mean |nnz_assigned - nnz_ideal| / nnz_ideal. Identically reusable for
+    MoE tokens-per-expert imbalance (DESIGN.md §4).
+    """
+    lengths = csr.row_lengths()
+    return partition_imbalance(lengths, n_threads)
+
+
+def partition_imbalance(item_weights: np.ndarray, n_parts: int) -> float:
+    """Eq. (5) generalized to any weighted-item contiguous partition."""
+    item_weights = np.asarray(item_weights, dtype=np.float64)
+    total = item_weights.sum()
+    if total == 0 or n_parts <= 0:
+        return 0.0
+    ideal = total / n_parts
+    bounds = np.linspace(0, item_weights.size, n_parts + 1).astype(np.int64)
+    csum = np.concatenate([[0.0], np.cumsum(item_weights)])
+    assigned = csum[bounds[1:]] - csum[bounds[:-1]]
+    return float(np.mean(np.abs(assigned - ideal) / ideal))
+
+
+def imbalance_sweep(csr: CSR, threads: Sequence[int] = THREAD_SWEEP) -> Dict[int, float]:
+    return {t: thread_imbalance(csr, t) for t in threads}
+
+
+def characterize(csr: CSR, threads: Sequence[int] = THREAD_SWEEP) -> Dict[str, float]:
+    """Full static-metric vector for one matrix (the paper's 'tail' features)."""
+    feats: Dict[str, float] = {
+        "branch_entropy": branch_entropy(csr),
+        "reuse_affinity": reuse_affinity(csr),
+        "index_affinity": index_affinity(csr),
+        "log_nnz": float(np.log10(max(csr.nnz, 1))),
+        "log_rows": float(np.log10(max(csr.n_rows, 1))),
+        "density": csr.density(),
+        "mean_row_length": float(csr.row_lengths().mean()) if csr.n_rows else 0.0,
+        "cv_row_length": _cv(csr.row_lengths()),
+    }
+    for t, v in imbalance_sweep(csr, threads).items():
+        feats[f"thread_imbalance_t{t}"] = v
+    return feats
+
+
+def _cv(x: np.ndarray) -> float:
+    x = np.asarray(x, dtype=np.float64)
+    m = x.mean() if x.size else 0.0
+    return float(x.std() / m) if m > 0 else 0.0
+
+
+FEATURE_NAMES = tuple(
+    ["branch_entropy", "reuse_affinity", "index_affinity", "log_nnz", "log_rows",
+     "density", "mean_row_length", "cv_row_length"]
+    + [f"thread_imbalance_t{t}" for t in THREAD_SWEEP]
+)

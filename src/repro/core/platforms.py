@@ -1,0 +1,95 @@
+"""TPU platform models — the paper's three-Arm-CPU axis adapted to TPU.
+
+The paper compares A64FX / Kunpeng 920 / Graviton 3 (Table 1), chosen for
+their *different* memory technologies, cache sizes and core counts. We keep
+the same experimental design with three TPU generations whose public specs
+differ along the analogous axes:
+
+  peak FLOP/s        <- vector units / core count
+  HBM bandwidth      <- memory technology + channel count
+  HBM latency        <- memory technology (DDR4 low-latency vs HBM2 high-BW)
+  VMEM capacity      <- cache size (locality capture)
+  DMA queue depth    <- MSHR size (memory-level parallelism)
+  ICI link bandwidth <- (multi-chip; used by the roofline collective term)
+
+Peak/HBM figures are public; VMEM/latency/queue-depth are *model parameters*
+(approximate, documented) — they play the role of the paper's
+microarchitectural features whose impact the decision trees expose.
+
+ROOFLINE_PLATFORM (v5e) carries the constants mandated for §Roofline:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    hbm_latency_s: float     # seconds, uncontended access latency (model param)
+    vmem_bytes: int          # on-chip vector memory (model param, approx)
+    dma_queue_depth: int     # in-flight HBM<->VMEM copies ("MSHR" analogue)
+    ici_bw_per_link: float   # bytes/s per ICI link
+    ici_links: int           # links per chip
+    mxu_dim: int = 128       # systolic array edge: matmul tiles want multiples
+
+    # --------------------------------------------------------- feature view
+    def features(self) -> Dict[str, float]:
+        """Hardware features fed to the decision trees (the 'head' axis)."""
+        return {
+            "hw_peak_tflops": self.peak_flops_bf16 / 1e12,
+            "hw_hbm_gbps": self.hbm_bw / 1e9,
+            "hw_hbm_latency_ns": self.hbm_latency_s * 1e9,
+            "hw_vmem_mb": self.vmem_bytes / 2**20,
+            "hw_dma_queue_depth": float(self.dma_queue_depth),
+            "hw_ici_gbps": self.ici_bw_per_link * self.ici_links / 1e9,
+        }
+
+
+# Three generations, mirroring the paper's three-way architecture contrast:
+#  - v4:  high HBM2 bandwidth, modest VMEM, shallow DMA queue (≈ A64FX role:
+#         big BW, small caches, costly irregularity)
+#  - v5e: balanced mid-range part (≈ Graviton 3 role)
+#  - v5p: biggest everything (≈ Kunpeng-920-role of winning latency-bound
+#         kernels, here via deep DMA queues + bandwidth)
+TPU_V4 = Platform(
+    name="tpu_v4",
+    peak_flops_bf16=275e12,
+    hbm_bw=1228e9,
+    hbm_latency_s=700e-9,
+    vmem_bytes=32 * 2**20,
+    dma_queue_depth=8,
+    ici_bw_per_link=50e9,
+    ici_links=6,
+)
+
+TPU_V5E = Platform(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_latency_s=650e-9,
+    vmem_bytes=64 * 2**20,
+    dma_queue_depth=16,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+)
+
+TPU_V5P = Platform(
+    name="tpu_v5p",
+    peak_flops_bf16=459e12,
+    hbm_bw=2765e9,
+    hbm_latency_s=600e-9,
+    vmem_bytes=128 * 2**20,
+    dma_queue_depth=32,
+    ici_bw_per_link=100e9,
+    ici_links=6,
+)
+
+PLATFORMS: Dict[str, Platform] = {p.name: p for p in (TPU_V4, TPU_V5E, TPU_V5P)}
+
+# §Roofline mandated constants (single-chip v5e).
+ROOFLINE_PLATFORM = TPU_V5E

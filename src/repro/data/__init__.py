@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMDataset, DataIterator  # noqa: F401

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the sparse hot spots (DESIGN.md §3).
+
+Each kernel directory has:
+  kernel.py  pl.pallas_call + BlockSpec schedule (TPU target; validated in
+             interpret mode on CPU)
+  ops.py     jit'd public wrapper with backend dispatch
+             ("pallas" | "interpret" | "jnp")
+  ref.py     pure-jnp oracle
+
+Kernels:
+  bsr_spmv        ELL-BSR sparse matrix-vector product (paper Alg. 1, §4.4
+                  ELL adaptation)
+  bsr_spadd       branch-free block-union sparse add (paper Alg. 3)
+  bsr_spgemm      Gustavson numeric phase over block pairs (paper Alg. 2)
+  moe_gmm         ragged grouped GEMM for MoE expert compute (MegaBlocks-
+                  style; the framework-integration of the paper's imbalance
+                  analysis)
+  flash_attention chunked online-softmax attention (prefill hot spot)
+"""
+from . import bsr_spmv, bsr_spadd, bsr_spgemm, moe_gmm, flash_attention  # noqa: F401

@@ -1,0 +1,2 @@
+from .ops import bsr_spadd, spadd_symbolic  # noqa: F401
+from .ref import ref_block_union_add  # noqa: F401

@@ -1,0 +1,69 @@
+"""Public SpADD op: symbolic (host) + numeric (kernel) phases."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.csr import CSR, BSR
+from ..common import resolve_backend
+from .kernel import bsr_spadd_pallas
+from .ref import ref_block_union_add
+
+
+def spadd_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray, np.ndarray]:
+    """Symbolic phase: union block structure of C = A + B.
+
+    Returns (c_block_ptrs, c_block_cols, ia, ib) where ia/ib index into the
+    block arrays of A/B with the zeros-sentinel convention (n_blocks = the
+    appended zero block).
+    """
+    n_br = max(bsr_a.n_block_rows, bsr_b.n_block_rows)
+    a_sent, b_sent = bsr_a.n_blocks, bsr_b.n_blocks
+    c_cols, ia, ib = [], [], []
+    c_ptrs = np.zeros(n_br + 1, dtype=np.int64)
+    for br in range(n_br):
+        amap = {}
+        if br < bsr_a.n_block_rows:
+            for k in range(bsr_a.block_ptrs[br], bsr_a.block_ptrs[br + 1]):
+                amap[int(bsr_a.block_cols[k])] = k
+        bmap = {}
+        if br < bsr_b.n_block_rows:
+            for k in range(bsr_b.block_ptrs[br], bsr_b.block_ptrs[br + 1]):
+                bmap[int(bsr_b.block_cols[k])] = k
+        union = sorted(set(amap) | set(bmap))
+        for col in union:
+            c_cols.append(col)
+            ia.append(amap.get(col, a_sent))
+            ib.append(bmap.get(col, b_sent))
+        c_ptrs[br + 1] = len(c_cols)
+    return (c_ptrs, np.asarray(c_cols, np.int32),
+            np.asarray(ia, np.int32), np.asarray(ib, np.int32))
+
+
+def bsr_spadd(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto"
+              ) -> BSR:
+    """C = A + B via block-union schedule; returns C as BSR."""
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    backend = resolve_backend(backend)
+    bsr_a = BSR.from_csr(a, block_size)
+    bsr_b = BSR.from_csr(b, block_size)
+    c_ptrs, c_cols, ia, ib = spadd_symbolic(bsr_a, bsr_b)
+    bs = block_size
+    a_blocks = jnp.concatenate(
+        [jnp.asarray(bsr_a.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
+    b_blocks = jnp.concatenate(
+        [jnp.asarray(bsr_b.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
+    ia_j, ib_j = jnp.asarray(ia), jnp.asarray(ib)
+    if ia.size == 0:
+        c_blocks = np.zeros((0, bs, bs), np.float32)
+    elif backend == "jnp":
+        c_blocks = np.asarray(ref_block_union_add(ia_j, ib_j, a_blocks, b_blocks))
+    else:
+        c_blocks = np.asarray(bsr_spadd_pallas(
+            ia_j, ib_j, a_blocks, b_blocks, interpret=(backend == "interpret")))
+    return BSR(c_ptrs, c_cols, c_blocks, a.shape, block_size)

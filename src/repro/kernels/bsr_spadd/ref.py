@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the block-union SpADD numeric phase."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ref_block_union_add(ia: jax.Array, ib: jax.Array, a_blocks: jax.Array,
+                        b_blocks: jax.Array) -> jax.Array:
+    return a_blocks[ia] + b_blocks[ib]

@@ -1,0 +1,2 @@
+from .ops import bsr_spgemm, spgemm_symbolic  # noqa: F401
+from .ref import ref_pair_gemm  # noqa: F401

@@ -1,0 +1,74 @@
+"""Public SpGEMM op: symbolic (host) + numeric (Pallas) phases (Alg. 2)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.csr import CSR, BSR
+from ..common import resolve_backend
+from .kernel import bsr_spgemm_pallas
+from .ref import ref_pair_gemm
+
+
+def spgemm_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
+                                                     np.ndarray, np.ndarray]:
+    """Symbolic phase (paper §2.1.3): C's block structure + contribution pairs.
+
+    Returns (c_block_ptrs, c_block_cols, pair_a, pair_b) where pair_a/pair_b
+    are (n_c_blocks, max_pairs) int32 padded with the zero-block sentinel.
+    Pairs are enumerated in A-row-major order = Gustavson's scan order.
+    """
+    b_rows = {}
+    for br in range(bsr_b.n_block_rows):
+        lo, hi = int(bsr_b.block_ptrs[br]), int(bsr_b.block_ptrs[br + 1])
+        b_rows[br] = {int(bsr_b.block_cols[k]): k for k in range(lo, hi)}
+    c_cols_all, pairs_all = [], []
+    c_ptrs = np.zeros(bsr_a.n_block_rows + 1, dtype=np.int64)
+    for br in range(bsr_a.n_block_rows):
+        contrib: dict = {}
+        for k in range(int(bsr_a.block_ptrs[br]), int(bsr_a.block_ptrs[br + 1])):
+            kk = int(bsr_a.block_cols[k])
+            for cj, bidx in b_rows.get(kk, {}).items():
+                contrib.setdefault(cj, []).append((k, bidx))
+        for cj in sorted(contrib):
+            c_cols_all.append(cj)
+            pairs_all.append(contrib[cj])
+        c_ptrs[br + 1] = len(c_cols_all)
+    n_c = len(c_cols_all)
+    mp = max((len(p) for p in pairs_all), default=1)
+    a_sent, b_sent = bsr_a.n_blocks, bsr_b.n_blocks
+    pair_a = np.full((n_c, mp), a_sent, dtype=np.int32)
+    pair_b = np.full((n_c, mp), b_sent, dtype=np.int32)
+    for i, plist in enumerate(pairs_all):
+        for j, (ka, kb) in enumerate(plist):
+            pair_a[i, j] = ka
+            pair_b[i, j] = kb
+    return c_ptrs, np.asarray(c_cols_all, np.int32), pair_a, pair_b
+
+
+def bsr_spgemm(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto"
+               ) -> BSR:
+    """C = A @ B via the block-pair Gustavson schedule; returns C as BSR."""
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"inner dims mismatch {a.shape} @ {b.shape}")
+    backend = resolve_backend(backend)
+    bsr_a = BSR.from_csr(a, block_size)
+    bsr_b = BSR.from_csr(b, block_size)
+    c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(bsr_a, bsr_b)
+    bs = block_size
+    a_blocks = jnp.concatenate(
+        [jnp.asarray(bsr_a.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
+    b_blocks = jnp.concatenate(
+        [jnp.asarray(bsr_b.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
+    if pair_a.shape[0] == 0:
+        c_blocks = np.zeros((0, bs, bs), np.float32)
+    elif backend == "jnp":
+        c_blocks = np.asarray(ref_pair_gemm(
+            jnp.asarray(pair_a), jnp.asarray(pair_b), a_blocks, b_blocks))
+    else:
+        c_blocks = np.asarray(bsr_spgemm_pallas(
+            jnp.asarray(pair_a), jnp.asarray(pair_b), a_blocks, b_blocks,
+            interpret=(backend == "interpret")))
+    return BSR(c_ptrs, c_cols, c_blocks, (a.shape[0], b.shape[1]), block_size)

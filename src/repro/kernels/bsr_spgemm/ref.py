@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SpGEMM block-pair numeric phase."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ref_pair_gemm(pair_a: jax.Array, pair_b: jax.Array, a_blocks: jax.Array,
+                  b_blocks: jax.Array) -> jax.Array:
+    a = a_blocks[pair_a]  # (n_c, mp, bs, bs)
+    b = b_blocks[pair_b]  # (n_c, mp, bs, bs)
+    return jnp.einsum("kpab,kpbc->kac", a, b)

@@ -1,0 +1,2 @@
+from .ops import bsr_spmv, ell_device_arrays  # noqa: F401
+from .ref import ref_bsr_spmv  # noqa: F401

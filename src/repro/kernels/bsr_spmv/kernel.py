@@ -1,0 +1,75 @@
+"""ELL-BSR SpMV Pallas TPU kernel (paper Alg. 1 adapted per §4.4 / DESIGN §2).
+
+Schedule
+  grid = (n_block_rows, max_blocks_per_row); the slot axis is innermost so
+  the output block-row stays resident in VMEM across accumulation steps.
+  Scalar-prefetched ``block_indices`` / ``block_cols`` drive the BlockSpec
+  index maps: the A tile for grid cell (i, j) is ``blocks[idx[i, j]]`` and
+  the x segment is ``x[cols[i, j]]`` — data-dependent HBM->VMEM DMA with no
+  data-dependent control flow in the kernel body. Padding slots point at a
+  trailing all-zeros block (ELLBSR invariant), so irregular rows cost dead
+  MXU lanes (the counters' ``padding_fraction``) instead of branches: the
+  paper's branch-misprediction bottleneck transformed into a measurable,
+  tree-visible quantity.
+
+VMEM per grid cell: (1+1 double-buffered) x (bs*bs + bs + bs) * 4B; at
+bs=128 that is ~132 KB, far under VMEM, leaving room for deeper pipelining.
+MXU alignment wants bs in {128, 256}; smaller bs trades padding for
+underutilized systolic lanes (autotune.py arbitrates via the tree model).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(idx_ref, cols_ref, blk_ref, x_ref, y_ref):
+    del idx_ref, cols_ref  # consumed by the index maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    # (bs, bs) @ (bs,) accumulated into the resident output block-row.
+    y_ref[...] += jnp.dot(
+        blk_ref[0], x_ref[0], preferred_element_type=jnp.float32
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spmv_pallas(block_indices: jax.Array, block_cols: jax.Array,
+                    blocks: jax.Array, x_blocks: jax.Array,
+                    interpret: bool = False) -> jax.Array:
+    """y = A @ x with A in ELL-BSR layout.
+
+    Args:
+      block_indices: (n_br, mb) int32 — index into ``blocks``; padding slots
+        hold ``blocks.shape[0] - 1`` (the all-zeros block).
+      block_cols:    (n_br, mb) int32 — block-column of each slot.
+      blocks:        (n_blocks + 1, bs, bs) float32, last block all-zeros.
+      x_blocks:      (n_block_cols, bs) float32 — dense vector, blocked.
+    Returns:
+      (n_br, bs) float32 — blocked result vector.
+    """
+    n_br, mb = block_indices.shape
+    bs = blocks.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_br, mb),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, j, idx, cols: (idx[i, j], 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, j, idx, cols: (cols[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda i, j, idx, cols: (i, 0)),
+    )
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_br, bs), jnp.float32),
+        interpret=interpret,
+    )(block_indices, block_cols, blocks, x_blocks)

@@ -1,0 +1,50 @@
+"""Public SpMV op: host-side format prep + backend dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.csr import CSR, BSR, ELLBSR
+from ..common import resolve_backend
+from .kernel import bsr_spmv_pallas
+from .ref import ref_bsr_spmv
+
+
+def ell_device_arrays(ell: ELLBSR) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Move an ELLBSR container to device arrays for the kernel."""
+    return (jnp.asarray(ell.block_indices, jnp.int32),
+            jnp.asarray(ell.block_cols, jnp.int32),
+            jnp.asarray(ell.blocks, jnp.float32),
+            ell.block_size)
+
+
+def prepare(csr: CSR, block_size: int = 128, max_blocks: int | None = None) -> ELLBSR:
+    return ELLBSR.from_bsr(BSR.from_csr(csr, block_size), max_blocks)
+
+
+def bsr_spmv(ell: ELLBSR, x: jax.Array, backend: str = "auto") -> jax.Array:
+    """y = A @ x for A in ELL-BSR form; x is the dense (n_cols,) vector.
+
+    Returns a dense (n_rows,) vector (unpadded).
+    """
+    backend = resolve_backend(backend)
+    bs = ell.block_size
+    n_bc = -(-ell.shape[1] // bs)
+    x_pad = jnp.zeros((n_bc * bs,), jnp.float32).at[: ell.shape[1]].set(
+        x.astype(jnp.float32))
+    x_blocks = x_pad.reshape(n_bc, bs)
+    idx, cols, blocks, _ = ell_device_arrays(ell)
+    if backend == "jnp":
+        y = ref_bsr_spmv(idx, cols, blocks, x_blocks)
+    else:
+        y = bsr_spmv_pallas(idx, cols, blocks, x_blocks,
+                            interpret=(backend == "interpret"))
+    return y.reshape(-1)[: ell.shape[0]]
+
+
+def spmv_oracle(csr: CSR, x: np.ndarray) -> np.ndarray:
+    """CSR-semantics oracle (paper Alg. 1), dense math."""
+    return csr.to_dense() @ np.asarray(x, np.float32)

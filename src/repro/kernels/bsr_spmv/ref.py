@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ELL-BSR SpMV kernel (same inputs, same output)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ref_bsr_spmv(block_indices: jax.Array, block_cols: jax.Array,
+                 blocks: jax.Array, x_blocks: jax.Array) -> jax.Array:
+    """y[i] = sum_j blocks[idx[i, j]] @ x_blocks[cols[i, j]]."""
+    a = blocks[block_indices]          # (n_br, mb, bs, bs)
+    xs = x_blocks[block_cols]          # (n_br, mb, bs)
+    return jnp.einsum("rmab,rmb->ra", a, xs)

@@ -1,0 +1,23 @@
+"""Shared backend dispatch for kernels.
+
+"pallas"    — compile for TPU (requires a TPU backend at runtime)
+"interpret" — run the same kernel body in the Pallas interpreter (CPU OK);
+              used by tests as the kernel-execution oracle check
+"jnp"       — pure-jnp implementation with identical semantics; this is the
+              path the pjit/dry-run model code uses (TPU Pallas calls cannot
+              lower for the CPU mesh of this container)
+"auto"      — "pallas" on TPU, "jnp" elsewhere
+"""
+from __future__ import annotations
+
+import jax
+
+VALID_BACKENDS = ("auto", "pallas", "interpret", "jnp")
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend!r}")
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"

@@ -1,0 +1,90 @@
+"""Chunked online-softmax attention (FlashAttention dataflow, TPU tiling).
+
+Used by the prefill hot spot of the LM substrate. grid = (batch*heads,
+q_tiles, kv_tiles) with the kv axis innermost; running max / sum-exp / accum
+live in VMEM scratch so the softmax never materializes the (S, S) score
+matrix — the memory-roofline fix for the 32k-prefill shapes (§Perf).
+
+VMEM per cell at (bq, bk, d) = (128, 128, 128): q, k, v tiles + acc + stats
+~ 5 x 64 KB x 2 buffers ~ 640 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                  # (bq, d)
+    k = k_ref[0]                                  # (bk, d)
+    v = v_ref[0]                                  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                              "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False
+                           ) -> jax.Array:
+    """softmax(q k^T / sqrt(d)) v without materializing scores.
+
+    Args:  q/k/v: (BH, S, D) float32 (batch*heads flattened; GQA expansion
+    happens in the wrapper).  Returns: (BH, S, D) float32.
+    """
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: exact softmax attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones(s.shape[-2:], bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

@@ -1,0 +1,2 @@
+from .ops import moe_gmm, route_and_pad  # noqa: F401
+from .ref import ref_gmm  # noqa: F401

@@ -1,0 +1,74 @@
+"""Ragged grouped GEMM for MoE expert compute (MegaBlocks-style).
+
+This is the framework integration of SpChar's imbalance analysis
+(DESIGN.md §4): tokens sorted by expert form ragged groups = the paper's
+nnz-per-row partition problem (Eq. 5). Groups are padded to the m-tile so
+the schedule is regular; raggedness shows up as tile padding, counted by
+``core.counters``-style metrics and arbitrated by ``autotune``.
+
+Layout: x is pre-sorted by expert and padded, (M, K); w is (E, K, N);
+``tile_expert`` maps each m-tile to its expert (scalar prefetch).
+
+grid = (m_tiles, n_tiles, k_tiles), k innermost: the C tile accumulates in
+VMEM across the K reduction; the expert weight tile is gathered per m-tile
+via the scalar-prefetched expert id. VMEM per cell at (tm, tn, tk) =
+(128, 128, 128) f32: 3 x 64 KB x 2 buffers ~ 384 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(eids_ref, x_ref, w_ref, o_ref):
+    del eids_ref
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k",
+                                              "interpret"))
+def moe_gmm_pallas(tile_expert: jax.Array, x: jax.Array, w: jax.Array,
+                   tile_m: int = 128, tile_n: int = 128, tile_k: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """out[t*tm:(t+1)*tm] = x[t*tm:(t+1)*tm] @ w[tile_expert[t]].
+
+    Args:
+      tile_expert: (m_tiles,) int32 expert id per m-tile.
+      x: (M, K) float32, M % tile_m == 0, sorted by expert, group-padded.
+      w: (E, K, N) float32 expert weights.
+    Returns:
+      (M, N) float32.
+    """
+    m, kdim = x.shape
+    e, _, n = w.shape
+    assert m % tile_m == 0 and kdim % tile_k == 0 and n % tile_n == 0, (
+        m, kdim, n, tile_m, tile_k, tile_n)
+    grid = (m // tile_m, n // tile_n, kdim // tile_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda mi, ni, ki, eids: (mi, ki)),
+            pl.BlockSpec((1, tile_k, tile_n),
+                         lambda mi, ni, ki, eids: (eids[mi], ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n),
+                               lambda mi, ni, ki, eids: (mi, ni)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(tile_expert, x, w)

@@ -1,0 +1,48 @@
+"""Public grouped-GEMM op + host-side routing/padding helper."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import resolve_backend
+from .kernel import moe_gmm_pallas
+from .ref import ref_gmm
+
+
+def route_and_pad(tokens: np.ndarray, expert_of_token: np.ndarray, n_experts: int,
+                  tile_m: int = 128) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sort tokens by expert; pad each group to a tile_m multiple.
+
+    Returns (x_sorted_padded (M, K), tile_expert (M/tile_m,),
+    inverse_index (M,) with -1 on padding rows) so outputs can be
+    scattered back: out_tokens[i] = out_padded[inverse_index == i].
+    """
+    t, k = tokens.shape
+    order = np.argsort(expert_of_token, kind="stable")
+    counts = np.bincount(expert_of_token, minlength=n_experts)
+    padded_counts = np.maximum(-(-counts // tile_m) * tile_m, tile_m)
+    m_total = int(padded_counts.sum())
+    x = np.zeros((m_total, k), tokens.dtype)
+    inv = np.full(m_total, -1, dtype=np.int64)
+    tile_expert = np.repeat(np.arange(n_experts), padded_counts // tile_m)
+    offs = np.concatenate([[0], np.cumsum(padded_counts)])
+    src = 0
+    for e in range(n_experts):
+        grp = order[src: src + counts[e]]
+        x[offs[e]: offs[e] + counts[e]] = tokens[grp]
+        inv[offs[e]: offs[e] + counts[e]] = grp
+        src += counts[e]
+    return x, tile_expert.astype(np.int32), inv
+
+
+def moe_gmm(tile_expert: jax.Array, x: jax.Array, w: jax.Array,
+            tile_m: int = 128, tile_n: int = 128, tile_k: int = 128,
+            backend: str = "auto") -> jax.Array:
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return ref_gmm(tile_expert, x, w, tile_m=tile_m)
+    return moe_gmm_pallas(tile_expert, x, w, tile_m=tile_m, tile_n=tile_n,
+                          tile_k=tile_k, interpret=(backend == "interpret"))

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the grouped GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def ref_gmm(tile_expert: jax.Array, x: jax.Array, w: jax.Array,
+            tile_m: int = 128) -> jax.Array:
+    m, _ = x.shape
+    token_expert = jnp.repeat(tile_expert, tile_m)          # (M,)
+    w_tok = w[token_expert]                                 # (M, K, N) gather
+    return jnp.einsum("mk,mkn->mn", x, w_tok)

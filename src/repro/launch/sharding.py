@@ -1,0 +1,233 @@
+"""Sharding rules: logical-axis map + path-based parameter PartitionSpecs.
+
+Strategy per DESIGN.md §6:
+  params  — FSDP over "data" x tensor-parallel over "model" where the arch's
+            dims divide the 16-way model axis; otherwise FSDP over
+            ("data", "model") combined (ZeRO-3-style), which always divides
+            because every assigned d_model % 256 == 0.
+  acts    — batch over ("pod", "data"); heads/ffn/vocab/experts over "model"
+            when divisible (see divisibility table in DESIGN.md §5).
+  caches  — KV sequence dim over "model" (decode batch rarely divides both
+            axes; sequence always does at the assigned shapes).
+  MoE     — experts over "model" when E % 16 == 0 (dbrx: EP all-to-all);
+            otherwise d_ff over "model" (mixtral: TP all-reduce).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .mesh import dp_axes
+
+TP_AXIS = "model"
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape[TP_AXIS]
+
+
+def divisible(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+# ---------------------------------------------------------------- logical
+def logical_rules(cfg: ArchConfig, mesh: Mesh,
+                  batch_size: Optional[int] = None,
+                  seq_len: Optional[int] = None) -> Dict[str, Any]:
+    tp = tp_size(mesh)
+    dpa = dp_axes(mesh)
+    dp_total = 1
+    for a in dpa:
+        dp_total *= mesh.shape[a]
+    batch_axes: Any = dpa
+    if batch_size is not None and batch_size % dp_total != 0:
+        # long_500k (B=1): replicate batch rather than shard unevenly.
+        batch_axes = None
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "batch": batch_axes,
+        "heads": TP_AXIS if divisible(cfg.n_heads, tp) else None,
+        "kv_heads": TP_AXIS if divisible(cfg.n_kv_heads, tp) else None,
+        "ffn": TP_AXIS if (divisible(cfg.d_ff, tp) or divisible(w, tp)) else None,
+        "vocab": TP_AXIS,
+        "experts": TP_AXIS if divisible(cfg.n_experts, tp) else None,
+        # MoE hidden dim: TP only when experts are NOT expert-parallel
+        # (both on "model" would duplicate the axis in one spec).
+        "moe_ffn": (TP_AXIS if (not divisible(cfg.n_experts, tp)
+                                and divisible(cfg.d_ff, tp)) else None),
+        "expert_dm": None,
+        # §Perf H-AR2: the TP-MoE expert output y_e is a partial sum over
+        # the ff contraction; sharding its d_model dim over the model axis
+        # turns the (B,E,C,d) all-reduce into a reduce-scatter (half the
+        # wire bytes, 1/tp the buffer). EP MoE (dbrx) keeps E on model.
+        "moe_out_dm": (TP_AXIS if (not divisible(cfg.n_experts, tp)
+                                   and divisible(cfg.d_model, tp)) else None),
+        "kv_seq": TP_AXIS,
+        # Megatron-style sequence parallelism for the residual stream: the
+        # scan carry is seq-sharded over the model axis so saved activations
+        # are 1/tp per chip; XLA inserts the AG/RS pair around each mixer.
+        # Disabled for decode (S=1) by the launcher.
+        "act_seq": TP_AXIS if divisible(seq_len or 0, tp) else None,
+        # Context parallelism for archs whose head counts don't divide the
+        # model axis (whisper 20H, phi3 40H, phi4/llama 24H): queries and
+        # scores shard on the *sequence* dim instead of heads, keeping the
+        # quadratic attention work balanced across the model axis.
+        "attn_q_seq": (TP_AXIS if (not divisible(cfg.n_heads, tp)
+                                   and divisible(seq_len or 0, tp)) else None),
+    }
+
+
+def heads_shardable(cfg: ArchConfig, mesh: Mesh) -> bool:
+    return divisible(cfg.n_heads, tp_size(mesh))
+
+
+def moe_ep(cfg: ArchConfig, mesh: Mesh) -> bool:
+    return divisible(cfg.n_experts, tp_size(mesh))
+
+
+# ----------------------------------------------------------------- params
+def param_specs(cfg: ArchConfig, params_abstract, mesh: Mesh):
+    """PartitionSpec pytree matching the param tree, by leaf path."""
+    hs = heads_shardable(cfg, mesh)
+    kvs = divisible(cfg.n_kv_heads, tp_size(mesh))
+    ep = moe_ep(cfg, mesh)
+    ffn_tp = divisible(cfg.d_ff, tp_size(mesh))
+    w_tp = divisible(cfg.lru_width or cfg.d_model, tp_size(mesh))
+    fsdp_all = ("data", TP_AXIS)
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        in_blocks = path[0] in ("blocks", "encoder")
+        lead = (None,) if in_blocks else ()
+        nd = leaf.ndim
+
+        if name == "embed":
+            return P(TP_AXIS, "data")
+        if name == "unembed":
+            return P("data", TP_AXIS)
+        # --- norms / small vectors
+        if name in ("scale", "bias", "a_log", "dt_bias", "d_skip",
+                    "norm_scale", "lam"):
+            return P(*lead, *([None] * (nd - len(lead))))
+        if name == "conv_w":
+            return P(*lead, None, TP_AXIS if w_tp and "rglru" in _kind(path)
+                     else None)
+        # --- attention
+        if _under(path, "mixer") and name in ("wq",):
+            return P(*lead, "data", TP_AXIS) if hs else P(*lead, fsdp_all, None)
+        if _under(path, "mixer") and name in ("wk", "wv"):
+            if kvs:
+                return P(*lead, "data", TP_AXIS)
+            return P(*lead, "data", None) if hs else P(*lead, fsdp_all, None)
+        if _under(path, "mixer") and name == "wo" and nd == len(lead) + 2:
+            return P(*lead, TP_AXIS, "data") if hs else P(*lead, fsdp_all, None)
+        if _under(path, "cross"):
+            if name == "wq":
+                return P(*lead, "data", TP_AXIS) if hs else P(*lead, fsdp_all, None)
+            if name in ("wk", "wv"):
+                return (P(*lead, "data", TP_AXIS) if kvs else
+                        (P(*lead, "data", None) if hs else P(*lead, fsdp_all, None)))
+            if name == "wo":
+                return P(*lead, TP_AXIS, "data") if hs else P(*lead, fsdp_all, None)
+        # --- MoE
+        if name == "router":
+            return P(*lead, "data", None)
+        if _under(path, "ffn") and nd == len(lead) + 3:  # (E, d, ff) expert weights
+            if name in ("wi_gate", "wi_up"):
+                return (P(*lead, TP_AXIS, "data", None) if ep
+                        else P(*lead, None, "data", TP_AXIS))
+            if name == "wo":
+                return (P(*lead, TP_AXIS, None, "data") if ep
+                        else P(*lead, None, TP_AXIS, "data"))
+        # --- dense FFN
+        if name in ("wi_gate", "wi_up", "wi"):
+            return (P(*lead, "data", TP_AXIS) if ffn_tp
+                    else P(*lead, fsdp_all, None))
+        if name == "wo":
+            return (P(*lead, TP_AXIS, "data") if ffn_tp
+                    else P(*lead, fsdp_all, None))
+        # --- SSD
+        if name == "w_in":
+            return P(*lead, "data", None)
+        if name == "w_out":
+            return P(*lead, TP_AXIS, "data") if w_tp else P(*lead, fsdp_all, None)
+        # --- RG-LRU
+        if name in ("w_x", "w_gate"):
+            return P(*lead, "data", TP_AXIS) if w_tp else P(*lead, fsdp_all, None)
+        if name in ("w_a", "w_i"):
+            return P(*lead, TP_AXIS, None) if w_tp else P(*lead, fsdp_all, None)
+        # fallback: FSDP on the largest dim
+        if nd > len(lead):
+            return P(*lead, "data", *([None] * (nd - len(lead) - 1)))
+        return P()
+
+    def _kind(path: Tuple[str, ...]) -> str:
+        return "/".join(path)
+
+    def _under(path: Tuple[str, ...], seg: str) -> bool:
+        return seg in path[:-1]
+
+    def mapper(path, leaf):
+        names = tuple(_path_names(path))
+        return spec_for(names, leaf)
+
+    return jax.tree_util.tree_map_with_path(mapper, params_abstract)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def as_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------ batch
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    rules = logical_rules(cfg, mesh, batch_size=shape.global_batch)
+    b = rules["batch"]
+    out = {"tokens": P(b, None), "loss_mask": P(b, None)}
+    if cfg.is_encdec:
+        out["audio_embed"] = P(b, None, None)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cache_abstract, mesh: Mesh,
+                batch_size: int) -> Any:
+    """KV caches: sequence over model axis; batch over dp axes if divisible;
+    recurrent states: channel/head dims over model."""
+    rules = logical_rules(cfg, mesh, batch_size=batch_size)
+    b = rules["batch"]
+    tp = tp_size(mesh)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        name = names[-1]
+        if name in ("k", "v"):     # (G, B, S, KV, D)
+            seq = TP_AXIS if leaf.shape[2] % tp == 0 else None
+            return P(None, b, seq, None, None)
+        if name == "h" and nd == 5:  # ssd state (G, B, H, N, P)
+            hshard = TP_AXIS if leaf.shape[2] % tp == 0 else None
+            return P(None, b, hshard, None, None)
+        if name == "h" and nd == 3:  # rglru state (G, B, W)
+            wshard = TP_AXIS if leaf.shape[2] % tp == 0 else None
+            return P(None, b, wshard)
+        if name == "conv":           # (G, B, K-1, C)
+            cshard = TP_AXIS if leaf.shape[3] % tp == 0 else None
+            return P(None, b, None, cshard)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abstract)

@@ -1,0 +1,49 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) per (arch x shape).
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these. For [audio]/[vlm] archs the modality frontend is a stub:
+whisper gets precomputed frame embeddings (B, 1500, d_model); qwen2-vl
+consumes token ids (patch embeddings would enter via the same slot).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.model import Model
+from ..optim.adamw import AdamW
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_abstract(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": S((b, s), jnp.int32),
+           "loss_mask": S((b, s), jnp.float32)}
+    if cfg.is_encdec:
+        out["audio_embed"] = S((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def train_abstract(model: Model, shape: ShapeConfig, optimizer: AdamW
+                   ) -> Tuple[Any, Any, Dict[str, Any]]:
+    params = model.abstract_params()
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state, batch_abstract(model.cfg, shape)
+
+
+def prefill_abstract(model: Model, shape: ShapeConfig) -> Tuple[Any, Dict]:
+    return model.abstract_params(), batch_abstract(model.cfg, shape)
+
+
+def decode_abstract(model: Model, shape: ShapeConfig):
+    """(params, cache, token, pos) for a one-new-token decode step with a
+    KV cache of seq_len (the decode_*/long_* shape semantics)."""
+    params = model.abstract_params()
+    cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+    token = S((shape.global_batch,), jnp.int32)
+    pos = S((), jnp.int32)
+    return params, cache, token, pos

@@ -1,0 +1,1 @@
+from .model import Model, count_params, count_active_params  # noqa: F401

@@ -1,0 +1,234 @@
+"""Attention for the LM substrate.
+
+Train/prefill uses a chunked online-softmax scan over KV blocks — the
+pure-jnp twin of kernels/flash_attention (which is the TPU Pallas path);
+the (S, S) score matrix never materializes, which is what lets the 32k
+prefill shapes fit the v5e memory roofline. Decode attends a single query
+against a (possibly rolling) KV cache.
+
+GQA: KV heads are repeated to Q heads *per chunk* (small), so the cache
+stays at KV-head size. Sliding windows are enforced by position masks; the
+banded-skip optimization (only touching chunks that intersect the window)
+is applied when window % chunk == 0 (§Perf iteration for local archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import cdtype, dense_init, pdtype, rope, mrope, softcap
+from .partitioning import shard_hint
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key, cross: bool = False) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * cfg.d_head), dtype=dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * cfg.d_head), dtype=dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * cfg.d_head), dtype=dt),
+        "wo": dense_init(ks[3], (cfg.n_heads * cfg.d_head, d), dtype=dt),
+    }
+
+
+def _project_qkv(cfg: ArchConfig, p: Dict, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    kvx = x if kv_x is None else kv_x
+    sk = kvx.shape[1]
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (kvx @ p["wk"].astype(dt)).reshape(b, sk, cfg.n_kv_heads, cfg.d_head)
+    v = (kvx @ p["wv"].astype(dt)).reshape(b, sk, cfg.n_kv_heads, cfg.d_head)
+    # Head TP when heads divide the model axis, else context parallelism
+    # (queries/scores sharded on the sequence dim) — see sharding.py.
+    q = shard_hint(q, "batch", "attn_q_seq", "heads", None)
+    k = shard_hint(k, "batch", None, "kv_heads", None)
+    v = shard_hint(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _positions(cfg: ArchConfig, q, k, q_pos, k_pos):
+    if cfg.rope_theta > 0:
+        if cfg.mrope_sections:
+            q = mrope(q, jnp.stack([q_pos] * 3), cfg.rope_theta, cfg.mrope_sections)
+            k = mrope(k, jnp.stack([k_pos] * 3), cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = rope(q, q_pos, cfg.rope_theta)
+            k = rope(k, k_pos, cfg.rope_theta)
+    return q, k
+
+
+def chunked_attention(cfg: ArchConfig, q: jax.Array, k: jax.Array,
+                      v: jax.Array, *, causal: bool, window: int = 0,
+                      chunk: int = 1024, q_offset: int = 0,
+                      kv_valid: Optional[int] = None,
+                      dots_bf16: bool = True) -> jax.Array:
+    """Online-softmax attention. q: (B,Sq,H,D); k/v: (B,Sk,KV,D).
+
+    window > 0 restricts to the sliding window (causal implied). kv_valid
+    masks trailing KV padding (whisper's padded encoder length).
+    dots_bf16 (§Perf H-bf16): score/context matmuls take bf16 operands with
+    f32 MXU accumulation — native TPU mode, halves dot operand traffic;
+    softmax statistics stay f32 either way.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    rep = h // kv
+    scale = 1.0 / (d ** 0.5)
+    q_pos = q_offset + jnp.arange(sq)
+
+    dot_dt = q.dtype if dots_bf16 else jnp.float32
+    qf = (q.astype(jnp.float32) * scale).astype(dot_dt).transpose(0, 2, 1, 3)
+
+    # Banded skip: with window % chunk == 0 only ceil(window/chunk)+1 chunks
+    # can intersect any query's band; implemented in the optimized local path
+    # (models/local_band.py); here we scan all chunks and mask.
+    def step(carry, ci):
+        m_run, l_run, acc = carry
+        k_c = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, axis=1)
+        if rep > 1:
+            k_c = jnp.repeat(k_c, rep, axis=2)
+            v_c = jnp.repeat(v_c, rep, axis=2)
+        k_c = shard_hint(k_c, "batch", None, "heads", None)
+        v_c = shard_hint(v_c, "batch", None, "heads", None)
+        s_blk = jnp.einsum("bhqd,bchd->bhqc", qf, k_c.astype(dot_dt),
+                           preferred_element_type=jnp.float32)
+        s_blk = softcap(s_blk, cfg.softcap_attn)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_valid is not None:
+            mask &= (k_pos < kv_valid)[None, :]
+        s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m_run, s_blk.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p_blk = jnp.exp(s_blk - m_new[..., None])
+        l_new = l_run * alpha + p_blk.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p_blk.astype(dot_dt), v_c.astype(dot_dt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    # Remat the chunk step: the (B,H,Sq,C) score block is recomputed in the
+    # backward pass instead of being saved per chunk (flash-attn dataflow).
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                        jnp.arange(n_chunks))
+    out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,D)
+
+
+def apply_attention(cfg: ArchConfig, p: Dict, x: jax.Array, *, kind: str,
+                    bidirectional: bool = False,
+                    kv_x: Optional[jax.Array] = None,
+                    kv_valid: Optional[int] = None,
+                    chunk: int = 1024,
+                    return_kv: bool = False):
+    """Train/prefill attention over a full sequence."""
+    q, k, v = _project_qkv(cfg, p, x, kv_x)
+    sq, sk = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    if kv_x is None:  # self-attention gets positions; cross-attn none
+        q, k = _positions(cfg, q, k, q_pos, k_pos)
+    window = cfg.window if kind in ("local_attn", "swa_attn") else 0
+    out = chunked_attention(cfg, q, k, v, causal=not bidirectional,
+                            window=window, chunk=chunk, kv_valid=kv_valid)
+    dt = cdtype(cfg)
+    y = out.reshape(out.shape[0], out.shape[1], -1) @ p["wo"].astype(dt)
+    y = shard_hint(y, "batch", None, None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------- decode
+def init_attn_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                    dtype) -> Dict:
+    s = min(cfg.window, max_len) if kind in ("local_attn", "swa_attn") else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict,
+                     pos: jax.Array, *, kind: str,
+                     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                     kv_valid: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict]:
+    """One-token attention. x: (B, 1, d); pos: scalar current position."""
+    dt = cdtype(cfg)
+    b = x.shape[0]
+    if cross_kv is not None:
+        q = (x @ p["wq"].astype(dt)).reshape(b, 1, cfg.n_heads, cfg.d_head)
+        k, v = cross_kv
+        s_len = k.shape[1]
+        kv_pos = jnp.arange(s_len)
+        mask = (kv_pos < kv_valid) if kv_valid is not None else None
+        out = _single_query_attention(cfg, q, k, v, mask)
+        y = out.reshape(b, 1, -1) @ p["wo"].astype(dt)
+        return y, cache
+
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    q, k_new = _positions(cfg, q, k_new, pos[None], pos[None])
+    window = cfg.window if kind in ("local_attn", "swa_attn") else 0
+    s_max = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % s_max, jnp.minimum(pos, s_max - 1))
+    k_cache = jax.lax.dynamic_update_slice(cache["k"],
+                                           k_new.astype(cache["k"].dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"],
+                                           v_new.astype(cache["v"].dtype),
+                                           (0, slot, 0, 0))
+    # Absolute position held by each slot (rolling buffer arithmetic).
+    idx = jnp.arange(s_max)
+    if window > 0:
+        slot_pos = pos - ((pos - idx) % s_max)
+    else:
+        slot_pos = idx
+    valid = (slot_pos <= pos)
+    if window > 0:
+        valid &= (pos - slot_pos) < window
+    # The cache stores already-rotated keys (rotation depends only on the
+    # absolute position at write time); rolling slot re-use overwrites only
+    # entries that the window mask excludes, so no re-rotation is needed.
+    out = _single_query_attention(cfg, q, k_cache.astype(dt),
+                                  v_cache.astype(dt), valid)
+    y = out.reshape(b, 1, -1) @ p["wo"].astype(dt)
+    y = shard_hint(y, "batch", None, None)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _single_query_attention(cfg: ArchConfig, q, k, v, mask) -> jax.Array:
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    s = softcap(s, cfg.softcap_attn)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

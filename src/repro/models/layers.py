@@ -1,0 +1,151 @@
+"""Shared layers: norms, activations, positions, FFN. Pure functions over
+param dicts; compute in ``cfg.compute_dtype`` with f32 reductions."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .partitioning import shard_hint
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(cfg: ArchConfig, d: int) -> Dict:
+    p = {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm(scale: jax.Array, x: jax.Array, z: jax.Array) -> jax.Array:
+    """Mamba-2's norm-then-gate: RMSNorm(x) * silu(z)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)
+            * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------- softcaps
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------- positions
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope(x: jax.Array, positions3: jax.Array, theta: float,
+          sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head dim's frequency bands are split
+    into (t, h, w) sections, each rotated by its own position stream.
+    positions3: (3, ..., S). For text all three streams coincide."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    # Select the position stream per frequency band.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)  # (half,)
+    pos_sel = positions3[sec_id]                        # (half, ..., S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)              # (..., S, half)
+    ang = pos_sel.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (frontend stub side)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * math.log(10_000.0) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------- FFN
+def init_ffn(cfg: ArchConfig, key) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wi_gate": dense_init(ks[0], (d, ff), dtype=dt),
+                "wi_up": dense_init(ks[1], (d, ff), dtype=dt),
+                "wo": dense_init(ks[2], (ff, d), dtype=dt)}
+    return {"wi": dense_init(ks[0], (d, ff), dtype=dt),
+            "wo": dense_init(ks[2], (ff, d), dtype=dt)}
+
+
+def apply_ffn(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    dt = cdtype(cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        g = x @ p["wi_gate"].astype(dt)
+        u = x @ p["wi_up"].astype(dt)
+        g = shard_hint(g, "batch", None, "ffn")
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+        h = shard_hint(h, "batch", None, "ffn")
+    out = h @ p["wo"].astype(dt)
+    return shard_hint(out, "batch", None, None)
+
+
+# ------------------------------------------------------------- conv (stub+)
+def causal_depthwise_conv1d(x: jax.Array, w: jax.Array,
+                            tail: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv over (B, S, C) with kernel (K, C).
+
+    Returns (y, new_tail) where tail is the last K-1 inputs (decode state).
+    """
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=-2)  # (B, S+K-1, C)
+    y = sum(xp[..., i: i + x.shape[-2], :] * w[i] for i in range(k))
+    new_tail = xp[..., xp.shape[-2] - (k - 1):, :]
+    return y.astype(x.dtype), new_tail

@@ -1,0 +1,91 @@
+"""Model facade bundling a config with its functional API."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import transformer as tfm
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def count_active_params(cfg: ArchConfig, params) -> int:
+    """Params touched per token: MoE expert FFNs scaled by top_k / E."""
+    total = count_params(params)
+    if not cfg.is_moe:
+        return total
+    inactive = 0
+    for blk in params["blocks"] if isinstance(params, dict) else []:
+        ffn = blk.get("ffn", {})
+        for name in ("wi_gate", "wi_up", "wo"):
+            if name in ffn:
+                n = int(np.prod(ffn[name].shape))
+                inactive += n - n * cfg.top_k // cfg.n_experts
+    return total - inactive
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -------------------------------------------------------------- params
+    def init(self, key) -> Dict:
+        return tfm.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return tfm.abstract_params(self.cfg)
+
+    # --------------------------------------------------------------- steps
+    def loss(self, params, batch, *, remat: str = "dots_no_batch",
+             attn_chunk: int = 1024):
+        return tfm.forward_train(self.cfg, params, batch, remat=remat,
+                                 attn_chunk=attn_chunk)
+
+    def prefill(self, params, batch, *, attn_chunk: int = 1024,
+                cache_len=None):
+        return tfm.forward_prefill(self.cfg, params, batch,
+                                   attn_chunk=attn_chunk,
+                                   cache_len=cache_len)
+
+    def decode(self, params, cache, token, pos):
+        return tfm.forward_decode(self.cfg, params, cache, token, pos)
+
+    def init_cache(self, batch: int, max_len: int):
+        return tfm.init_cache(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: tfm.init_cache(self.cfg, batch, max_len))
+
+    # ------------------------------------------------------------ sampling
+    def generate(self, params, prompt: jax.Array, steps: int,
+                 max_len: Optional[int] = None, temperature: float = 0.0,
+                 key=None, audio_embed: Optional[jax.Array] = None):
+        """Greedy/temperature sampling loop (CPU-scale; serving example)."""
+        b, s = prompt.shape
+        max_len = max_len or (s + steps)
+        batch: Dict[str, Any] = {"tokens": prompt}
+        if audio_embed is not None:
+            batch["audio_embed"] = audio_embed
+        logits, cache = self.prefill(params, batch, cache_len=max_len)
+        toks = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(steps):
+            toks.append(tok)
+            logits, cache = self.decode(params, cache, tok,
+                                        jnp.asarray(s + i, jnp.int32))
+            tok = self._sample(logits, temperature, key, i + 1)
+        return jnp.stack(toks, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with capacity-bounded dispatch.
+
+This is SpChar's framework integration point (DESIGN.md §4): tokens-per-
+expert is exactly the paper's nnz-per-row partition problem, and the
+load-balance statistics logged here are Eq. 5 verbatim
+(``core.metrics.partition_imbalance``).
+
+Dispatch (pjit path, used for training + dry-run): per batch row, each
+token's top-k experts get slots in an (E, C) buffer via an in-row cumsum —
+no (S, E, C) one-hot tensor ever materializes. Capacity C =
+ceil(top_k * S * capacity_factor / E); overflow tokens are dropped (GShard
+policy) and counted. Expert dims are annotated with the "experts"/"ffn"
+logical axes so the launcher can choose EP (all-to-all) or TP (all-reduce)
+per arch: dbrx (16e) shards experts over the model axis; mixtral (8e)
+shards d_ff.
+
+The single-device/TPU fast path (kernels/moe_gmm) is selected by
+``backend="megablocks"`` and used in the serving example + kernel benches.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import cdtype, dense_init, pdtype
+from .partitioning import shard_hint
+
+
+def init_moe(cfg: ArchConfig, key) -> Dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "wi_gate": dense_init(ks[1], (e, d, ff), dtype=dt),
+        "wi_up": dense_init(ks[2], (e, d, ff), dtype=dt),
+        "wo": dense_init(ks[3], (e, ff, d), dtype=dt),
+    }
+
+
+def _capacity(cfg: ArchConfig, s: int) -> int:
+    c = int(cfg.top_k * s * cfg.capacity_factor / cfg.n_experts)
+    return max(-(-c // 8) * 8, 8)  # pad to 8 for lane alignment
+
+
+def apply_moe(cfg: ArchConfig, p: Dict, x: jax.Array
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (out (B, S, d), metrics).
+
+    Returns aux metrics: load_balance_loss (Switch aux), expert_imbalance
+    (Eq. 5 over tokens-per-expert), dropped_fraction.
+    """
+    dt = cdtype(cfg)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, s)
+
+    # f32 routing math without materializing an f32 copy of x
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+
+    # ---- slot assignment: position of each (token, k) within its expert.
+    # one-hot over experts per (token, k) slot, cumsum over (S*K) flattened
+    # in row-major (token-major) order => GShard's priority = token order.
+    sel = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)        # (B,S,K,E)
+    flat = sel.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                # (B,S*K,E)
+    pos = (pos_in_e * flat).sum(-1).reshape(b, s, k)          # (B,S,K)
+    keep = pos < cap
+    dropped = 1.0 - keep.mean()
+
+    # ---- build inverse map (B, E, C) -> source token index (or S = pad).
+    # vmapped over batch so the batch dim is a true gather/scatter batching
+    # dim — SPMD partitions those; explicit batch-index arrays would force
+    # replication of the (B, S, d) buffers.
+    src = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, k))
+    slot = jnp.where(keep, pos, cap)
+
+    def _inv_one(gidx_, slot_, src_, gv_, keep_):
+        i = jnp.full((e, cap), s, jnp.int32)
+        i = i.at[gidx_, slot_].set(jnp.where(keep_, src_, s), mode="drop")
+        g = jnp.zeros((e, cap), jnp.float32)
+        g = g.at[gidx_, slot_].set(jnp.where(keep_, gv_, 0.0), mode="drop")
+        return i, g
+
+    inv, gate_slot = jax.vmap(_inv_one)(gate_idx, slot, src, gate_vals, keep)
+
+    # ---- dispatch: gather tokens into (B, E, C, d).
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    x_e = jax.vmap(lambda xp, iv: xp[iv])(x_pad, inv)         # (B,E,C,d)
+    x_e = shard_hint(x_e, "batch", "experts", None, "expert_dm")
+
+    # ---- expert FFN (SwiGLU), expert/ffn dims sharded per launcher rules.
+    wig, wiu, wo = (p["wi_gate"].astype(dt), p["wi_up"].astype(dt),
+                    p["wo"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", x_e, wig)
+    u = jnp.einsum("becd,edf->becf", x_e, wiu)
+    g = shard_hint(g, "batch", "experts", None, "moe_ffn")
+    h = (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)) * u
+    y_e = jnp.einsum("becf,efd->becd", h, wo)
+    y_e = shard_hint(y_e, "batch", "experts", None, "expert_dm")
+
+    # ---- combine: scatter-add back to token positions with gate weights.
+    # bf16 updates (<= top_k adds per token), vmapped over batch (see above).
+    y_w = (y_e * gate_slot[..., None].astype(y_e.dtype)).astype(dt)
+    y_w = shard_hint(y_w, "batch", "experts", None, "moe_out_dm")
+
+    def _combine_one(yw_, iv_):
+        return jnp.zeros((s + 1, d), dt).at[iv_].add(yw_, mode="drop")
+
+    out = jax.vmap(_combine_one)(y_w, inv)[:, :s]
+    out = shard_hint(out, "batch", "act_seq", None)
+
+    # ---- metrics: Switch aux loss + SpChar Eq. 5 imbalance.
+    frac_tokens = sel.sum(axis=(1, 2)).astype(jnp.float32) / (s * k)  # (B,E)
+    mean_prob = probs.mean(axis=1)                                    # (B,E)
+    aux = (e * (frac_tokens * mean_prob).sum(-1)).mean()
+    counts = sel.sum(axis=(1, 2)).astype(jnp.float32)                 # (B,E)
+    ideal = counts.sum(-1, keepdims=True) / e
+    imbalance = (jnp.abs(counts - ideal) / jnp.maximum(ideal, 1e-9)
+                 ).mean()                                             # Eq. 5
+    return out, {"load_balance_loss": aux, "expert_imbalance": imbalance,
+                 "dropped_fraction": dropped}

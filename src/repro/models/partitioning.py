@@ -1,0 +1,52 @@
+"""Logical-axis sharding hints.
+
+Model code annotates activations with *logical* axes ("batch", "heads",
+"ffn", ...). The launcher installs a mapping logical axis -> mesh axis (or
+None) before tracing; outside a mesh (CPU smoke tests) hints are no-ops.
+This keeps the model definition mesh-agnostic — the same code lowers for
+(data, model), (pod, data, model), or a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, MeshAxes]]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    """Install logical->mesh axis rules for the duration of a trace."""
+    prev = _current()
+    _state.rules = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...]) -> P:
+    cur = _current()
+    assert cur is not None
+    _, rules = cur
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard_hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without rules)."""
+    cur = _current()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    spec = P(*[rules.get(a) if a is not None else None for a in axes])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence:  r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+             a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan over the sequence (log-depth,
+TPU-friendly); decode is a single step. The block wraps the recurrence with
+the Griffin residual structure: x -> [linear -> conv1d -> RG-LRU] * gelu
+(gate branch) -> linear out.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import causal_depthwise_conv1d, cdtype, dense_init, pdtype
+from .partitioning import shard_hint
+
+RGLRU_C = 8.0
+
+
+def init_rglru(cfg: ArchConfig, key) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dtype=dt),       # recurrent branch
+        "w_gate": dense_init(ks[1], (d, w), dtype=dt),    # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, w)) * 0.1
+                   ).astype(dt),
+        "w_a": dense_init(ks[3], (w, w), dtype=dt),       # recurrence gate
+        "w_i": dense_init(ks[4], (w, w), dtype=dt),       # input gate
+        "lam": jnp.full((w,), 2.0, dt),                   # Lambda (softplus)
+        "w_out": dense_init(ks[5], (w, d), dtype=dt),
+    }
+
+
+def _rglru_core(p: Dict, x: jax.Array, h0: Optional[jax.Array]
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, W) -> (y (B, S, W), h_final (B, W)). float32 math."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                   # (B,S,W) in (0,1)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    if h0 is not None:
+        # Fold the initial state in as a virtual step 0 contribution.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def apply_rglru(cfg: ArchConfig, p: Dict, u: jax.Array, *,
+                cache: Optional[Dict] = None,
+                pos: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """u: (B, S, d). cache: {"h": (B, W), "conv": (B, K-1, W)} for decode."""
+    dt = cdtype(cfg)
+    x = u @ p["w_x"].astype(dt)
+    x = shard_hint(x, "batch", None, "ffn")
+    gate = jax.nn.gelu(u @ p["w_gate"].astype(dt))
+    tail = cache["conv"] if cache is not None else None
+    x, new_tail = causal_depthwise_conv1d(x, p["conv_w"].astype(dt), tail)
+    h0 = cache["h"] if cache is not None else None
+    if u.shape[1] == 1 and cache is not None:  # decode single step
+        xf = x[:, 0].astype(jnp.float32)
+        r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+        i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32))
+        a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r)
+        h_new = a * h0.astype(jnp.float32) \
+            + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+        y = h_new[:, None]
+        h_f = h_new
+    else:
+        y, h_f = _rglru_core(p, x, h0)
+    y = (y.astype(dt) * gate) @ p["w_out"].astype(dt)
+    y = shard_hint(y, "batch", None, None)
+    new_cache = ({"h": h_f, "conv": new_tail} if cache is not None else None)
+    return y, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype)}

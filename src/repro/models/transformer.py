@@ -1,0 +1,415 @@
+"""Transformer assembly: blocks, scan-over-groups, train/prefill/decode.
+
+Layers are stacked with ``jax.lax.scan`` over *groups* (one group = one tile
+of cfg.layer_pattern), so the lowered HLO contains a single group body even
+at 80 layers — essential for tractable multi-pod dry-run compiles. Remat is
+applied to the group body (policy configurable). The final projection /
+cross-entropy is computed in sequence chunks so (B, S, vocab) logits never
+materialize.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (apply_ffn, apply_norm, cdtype, dense_init, init_ffn,
+                     init_norm, pdtype, sinusoidal_positions, softcap)
+from .partitioning import shard_hint
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    # §Perf H-remat-names: save each sublayer's (seq-sharded, bf16) output
+    # so the backward re-forward skips recomputing attention/FFN bodies;
+    # costs ~n_layers x (B,S,d)/tp bytes, saves one full forward pass of
+    # the expensive mixers.
+    "save_outs": jax.checkpoint_policies.save_only_these_names(
+        "mixer_out", "cross_out", "ffn_out"),
+}
+
+MOE_AUX_KEYS = ("load_balance_loss", "expert_imbalance", "dropped_fraction")
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, kind: str, key, cross: bool) -> Dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg, cfg.d_model)}
+    if kind in ("attn", "local_attn", "swa_attn"):
+        p["mixer"] = attn_mod.init_attention(cfg, ks[0])
+    elif kind == "ssd":
+        p["mixer"] = ssm_mod.init_ssd(cfg, ks[0])
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        p["norm1_post"] = init_norm(cfg, cfg.d_model)
+    if cross:
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+        p["cross"] = attn_mod.init_attention(cfg, ks[1], cross=True)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        p["ffn"] = (moe_mod.init_moe(cfg, ks[2]) if cfg.is_moe
+                    else init_ffn(cfg, ks[2]))
+        if cfg.post_norm:
+            p["norm2_post"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict:
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.vocab_padded, cfg.d_model), dtype=dt),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_padded),
+                                       dtype=dt)
+    blocks = []
+    for pi, kind in enumerate(cfg.layer_pattern):
+        gkeys = jax.random.split(jax.random.fold_in(ks[2], pi), cfg.n_groups)
+        blocks.append(jax.vmap(
+            lambda k: _init_block(cfg, kind, k, cfg.cross_attention))(gkeys))
+    params["blocks"] = tuple(blocks)
+    if cfg.is_encdec:
+        ekeys = jax.random.split(ks[3], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_block(cfg, "attn", k, False))(ekeys)
+        params["enc_final_norm"] = init_norm(cfg, cfg.d_model)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, seed: int = 0):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(seed)))
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ArchConfig, kind: str, p: Dict, x: jax.Array, *,
+                 mode: str, cache: Optional[Dict], pos: Optional[jax.Array],
+                 bidirectional: bool = False, self_kv_valid: Optional[int] = None,
+                 cross_enc: Optional[jax.Array] = None,
+                 enc_valid: Optional[int] = None, attn_chunk: int = 1024,
+                 cache_len: Optional[int] = None):
+    """One block. Returns (x, new_cache_dict, aux_metrics)."""
+    new_cache: Dict[str, Any] = {}
+    aux: Dict[str, jax.Array] = {}
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn", "swa_attn"):
+        if mode == "decode":
+            y, c_new = attn_mod.decode_attention(cfg, p["mixer"], h,
+                                                 cache["self"], pos, kind=kind)
+            new_cache["self"] = c_new
+        else:
+            ret = attn_mod.apply_attention(
+                cfg, p["mixer"], h, kind=kind, bidirectional=bidirectional,
+                kv_valid=self_kv_valid, chunk=attn_chunk,
+                return_kv=(mode == "prefill"))
+            if mode == "prefill":
+                y, (k_full, v_full) = ret
+                new_cache["self"] = _kv_to_cache(cfg, kind, k_full, v_full,
+                                                 cache_len)
+            else:
+                y = ret
+    elif kind in ("ssd", "rglru"):
+        mod = ssm_mod if kind == "ssd" else rglru_mod
+        init_c = (ssm_mod.init_ssd_cache if kind == "ssd"
+                  else rglru_mod.init_rglru_cache)
+        if mode == "train":
+            c_in = None
+        elif mode == "prefill":
+            c_in = init_c(cfg, h.shape[0], h.dtype)
+        else:
+            c_in = cache["self"]
+        apply = ssm_mod.apply_ssd if kind == "ssd" else rglru_mod.apply_rglru
+        y, c_new = apply(cfg, p["mixer"], h, cache=c_in, pos=pos)
+        if mode != "train":
+            new_cache["self"] = c_new
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        y = apply_norm(cfg, p["norm1_post"], y)
+    x = x + checkpoint_name(y, "mixer_out")
+
+    if "cross" in p:
+        h = apply_norm(cfg, p["norm_cross"], x)
+        if mode == "decode":
+            ck = cache["cross"]
+            y, _ = attn_mod.decode_attention(
+                cfg, p["cross"], h, {}, pos, kind="attn",
+                cross_kv=(ck["k"], ck["v"]), kv_valid=enc_valid)
+            new_cache["cross"] = ck  # pass through unchanged
+        else:
+            y, (k_c, v_c) = attn_mod.apply_attention(
+                cfg, p["cross"], h, kind="attn", bidirectional=True,
+                kv_x=cross_enc, kv_valid=enc_valid,
+                chunk=min(attn_chunk, 512),  # encoder pads to 512 multiples
+                return_kv=True)
+            if mode == "prefill":
+                new_cache["cross"] = {"k": k_c.astype(cdtype(cfg)),
+                                      "v": v_c.astype(cdtype(cfg))}
+        x = x + checkpoint_name(y, "cross_out")
+
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg, p["norm2"], x)
+        if cfg.is_moe:
+            y, aux = moe_mod.apply_moe(cfg, p["ffn"], h)
+        else:
+            y = apply_ffn(cfg, p["ffn"], h)
+        if cfg.post_norm:
+            y = apply_norm(cfg, p["norm2_post"], y)
+        x = x + checkpoint_name(y, "ffn_out")
+    return x, new_cache, aux
+
+
+def _kv_to_cache(cfg: ArchConfig, kind: str, k: jax.Array, v: jax.Array,
+                 cache_len: Optional[int] = None) -> Dict:
+    """Pack prefill K/V into the decode cache layout (rolling for local;
+    zero-padded to ``cache_len`` for full attention so decode can append)."""
+    s = k.shape[1]
+    dt = cdtype(cfg)
+    if kind in ("local_attn", "swa_attn") and cfg.window < s:
+        w = cfg.window
+        # slot (p % w) holds position p for p in [s - w, s)
+        tail_pos = np.arange(s - w, s)
+        order = np.empty(w, dtype=np.int64)
+        order[tail_pos % w] = np.arange(w)
+        k = k[:, s - w:][:, order]
+        v = v[:, s - w:][:, order]
+    elif cache_len is not None and cache_len > s:
+        pad = ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return {"k": k.astype(dt), "v": v.astype(dt)}
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def apply_stack(cfg: ArchConfig, blocks, x, caches=None, *, mode: str,
+                pos=None, cross_enc=None, enc_valid=None,
+                remat: str = "none", attn_chunk: int = 1024,
+                cache_len: Optional[int] = None):
+    """Scan the group body over cfg.n_groups.
+
+    blocks: tuple (per pattern position) of group-stacked params.
+    caches: matching structure (decode) or None (train/prefill).
+    """
+    if caches is None:
+        caches = tuple(None for _ in cfg.layer_pattern)
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        params_g, caches_g = xs
+        # Sequence-parallel residual stream (no-op unless rules map act_seq).
+        x = shard_hint(x, "batch", "act_seq", None)
+        new_caches = []
+        for pi, kind in enumerate(cfg.layer_pattern):
+            cache_pi = caches_g[pi] if caches_g[pi] is not None else None
+            x, c_new, aux = _apply_block(
+                cfg, kind, params_g[pi], x, mode=mode, cache=cache_pi,
+                pos=pos, cross_enc=cross_enc, enc_valid=enc_valid,
+                attn_chunk=attn_chunk, cache_len=cache_len)
+            new_caches.append(c_new)
+            for k in aux_acc:
+                aux_acc = dict(aux_acc)
+                aux_acc[k] = aux_acc[k] + aux.get(k, 0.0)
+        return (x, aux_acc), tuple(new_caches)
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat],
+                              prevent_cse=False)
+
+    aux0 = ({k: jnp.zeros((), jnp.float32) for k in MOE_AUX_KEYS}
+            if cfg.is_moe else {})
+    (x, aux_total), new_caches = jax.lax.scan(body, (x, aux0),
+                                              (blocks, caches))
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ArchConfig, params, tokens: jax.Array,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    dt = cdtype(cfg)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.rope_theta <= 0:  # absolute sinusoidal positions (whisper)
+        if positions is None:
+            positions = jnp.arange(tokens.shape[-1])
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(dt)
+    return shard_hint(x, "batch", None, None)
+
+
+def _unembed_matrix(cfg: ArchConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def logits_at(cfg: ArchConfig, params, h: jax.Array) -> jax.Array:
+    dt = cdtype(cfg)
+    w = _unembed_matrix(cfg, params).astype(dt)
+    lg = (h @ w).astype(jnp.float32)
+    lg = softcap(lg, cfg.softcap_logits)
+    return shard_hint(lg, "batch", None, "vocab")
+
+
+def chunked_xent(cfg: ArchConfig, params, h: jax.Array, targets: jax.Array,
+                 mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over sequence chunks; never builds (B, S, V) logits."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    w = _unembed_matrix(cfg, params).astype(cdtype(cfg))
+
+    def step(acc, ci):
+        h_c = jax.lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        t_c = jax.lax.dynamic_slice_in_dim(targets, ci * chunk, chunk, axis=1)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, ci * chunk, chunk, axis=1)
+        lg = (h_c @ w).astype(jnp.float32)
+        lg = softcap(lg, cfg.softcap_logits)
+        lg = shard_hint(lg, "batch", None, "vocab")
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, t_c[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m_c
+        return (acc[0] + nll.sum(), acc[1] + m_c.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Top-level model functions
+# ---------------------------------------------------------------------------
+
+def encoder_pad_len(cfg: ArchConfig, chunk: int = 512) -> int:
+    return -(-cfg.encoder_len // chunk) * chunk
+
+
+def _encode(cfg: ArchConfig, params, audio_embed: jax.Array,
+            attn_chunk: int) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings (B, enc_len, d)."""
+    dt = cdtype(cfg)
+    x = audio_embed.astype(dt)
+    pad = encoder_pad_len(cfg) - x.shape[1]
+    if pad > 0:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    x = x + sinusoidal_positions(jnp.arange(x.shape[1]),
+                                 cfg.d_model).astype(dt)
+    x = shard_hint(x, "batch", None, None)
+
+    def body(x, params_l):
+        x, _, _ = _apply_block(cfg, "attn", params_l, x, mode="train",
+                               cache=None, pos=None, bidirectional=True,
+                               self_kv_valid=cfg.encoder_len,
+                               attn_chunk=min(attn_chunk, 512))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def forward_train(cfg: ArchConfig, params, batch: Dict[str, jax.Array], *,
+                  remat: str = "dots_no_batch", attn_chunk: int = 1024
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B, S) int32 [, loss_mask (B, S), audio_embed].
+
+    Next-token objective: position i predicts tokens[i + 1].
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    cross_enc, enc_valid = None, None
+    if cfg.is_encdec:
+        cross_enc = _encode(cfg, params, batch["audio_embed"], attn_chunk)
+        enc_valid = cfg.encoder_len
+    x, _, aux = apply_stack(cfg, params["blocks"], x, mode="train",
+                            cross_enc=cross_enc, enc_valid=enc_valid,
+                            remat=remat, attn_chunk=attn_chunk)
+    x = apply_norm(cfg, params["final_norm"], x)
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = batch.get("loss_mask", jnp.ones_like(tokens)).astype(jnp.float32)
+    mask = mask.at[:, -1].set(0.0)
+    loss = chunked_xent(cfg, params, x, targets, mask)
+    metrics = {"loss": loss,
+               **{k: v / cfg.n_groups for k, v in aux.items()}}
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux["load_balance_loss"] / cfg.n_groups
+    return loss, metrics
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Decode cache: tuple per pattern position, each stacked over groups."""
+    dt = cdtype(cfg)
+
+    def one(kind):
+        def make(_):
+            c: Dict[str, Any] = {}
+            if kind in ("attn", "local_attn", "swa_attn"):
+                c["self"] = attn_mod.init_attn_cache(cfg, kind, batch,
+                                                     max_len, dt)
+            elif kind == "ssd":
+                c["self"] = ssm_mod.init_ssd_cache(cfg, batch, dt)
+            elif kind == "rglru":
+                c["self"] = rglru_mod.init_rglru_cache(cfg, batch, dt)
+            if cfg.cross_attention:
+                pad = encoder_pad_len(cfg)
+                kv = (batch, pad, cfg.n_kv_heads, cfg.d_head)
+                c["cross"] = {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+            return c
+        return jax.vmap(make)(jnp.arange(cfg.n_groups))
+
+    return tuple(one(kind) for kind in cfg.layer_pattern)
+
+
+def forward_prefill(cfg: ArchConfig, params, batch: Dict[str, jax.Array], *,
+                    attn_chunk: int = 1024, cache_len: Optional[int] = None):
+    """Returns (last-position logits (B, V_pad), decode cache)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    cross_enc, enc_valid = None, None
+    if cfg.is_encdec:
+        cross_enc = _encode(cfg, params, batch["audio_embed"], attn_chunk)
+        enc_valid = cfg.encoder_len
+    x, caches, _ = apply_stack(cfg, params["blocks"], x, mode="prefill",
+                               cross_enc=cross_enc, enc_valid=enc_valid,
+                               attn_chunk=attn_chunk, cache_len=cache_len)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_at(cfg, params, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
+                   pos: jax.Array):
+    """token: (B,) int32; pos: scalar int32. Returns (logits, new_cache)."""
+    x = embed_tokens(cfg, params, token[:, None], positions=pos[None])
+    enc_valid = cfg.encoder_len if cfg.is_encdec else None
+    x, new_caches, _ = apply_stack(cfg, params["blocks"], x, cache,
+                                   mode="decode", pos=pos,
+                                   enc_valid=enc_valid)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_at(cfg, params, x)[:, 0]
+    return logits, new_caches

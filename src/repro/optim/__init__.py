@@ -1,0 +1,3 @@
+from .adamw import AdamW, OptState, apply_updates  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup_cosine  # noqa: F401
+from .compression import compress_tree, decompress_tree  # noqa: F401

@@ -1,0 +1,72 @@
+"""AdamW implemented in-house (no optax in this container).
+
+State pytrees mirror the param tree so the launcher's param PartitionSpecs
+apply verbatim to m/v (FSDP-sharded optimizer state = ZeRO-1 for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array     # () int32
+    m: Any              # like params
+    v: Any              # like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    # weight decay is masked out for 1-D params (norm scales, biases)
+    decay_mask: Optional[Callable[[Any], Any]] = None
+
+    def init(self, params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros,
+                        jax.tree.map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: OptState, params):
+        step = state.step + 1
+        if self.grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+            scale = jnp.ones((), jnp.float32)
+        lr = self._lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            upd = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * upd).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(leaf, grads, state.m, state.v, params)
+        updates, m_new, v_new = jax.tree.transpose(
+            jax.tree.structure(params), jax.tree.structure((0, 0, 0)), flat)
+        return updates, OptState(step, m_new, v_new), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

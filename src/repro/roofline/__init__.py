@@ -1,0 +1,3 @@
+from .hlo_analysis import analyze_hlo, HLOStats  # noqa: F401
+from .analysis import roofline_terms, RooflineReport  # noqa: F401
+from .model_flops import model_flops  # noqa: F401

@@ -1,0 +1,97 @@
+"""Three-term roofline from a compiled dry-run artifact (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bandwidth)
+    collective term = collective_bytes / (chips x link bandwidth)
+
+HLO_FLOPs / HLO_bytes come from ``cost_analysis()`` cross-checked against
+the while-loop-aware HLO parse (hlo_analysis.py); the HLO parse wins when
+the module contains while loops (scan-over-layers), because XLA's cost
+analysis counts loop bodies once. collective_bytes always comes from the
+HLO parse. Shapes in the partitioned module are per-chip, so terms are
+per-chip directly (no division by chip count needed for parsed numbers;
+the formulas above are expressed per-chip accordingly).
+
+Hardware constants (v5e, mandated): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..core.platforms import ROOFLINE_PLATFORM, Platform
+from .hlo_analysis import HLOStats, analyze_hlo
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-chip quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # usefulness
+    model_flops_global: float
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs x chips)
+    roofline_fraction: float      # t_ideal_compute / t_bound
+    # bookkeeping
+    cost_analysis_flops: float
+    cost_analysis_bytes: float
+    memory_per_device_bytes: float
+
+    def row(self) -> str:
+        return (f"{self.arch:18s} {self.shape:12s} {self.mesh:9s} "
+                f"C={self.t_compute:.3e}s M={self.t_memory:.3e}s "
+                f"X={self.t_collective:.3e}s -> {self.bottleneck:10s} "
+                f"useful={self.useful_ratio:.2f} "
+                f"roofline={self.roofline_fraction:.2f}")
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, n_chips: int,
+                   hlo_text: str, cost: Dict[str, float],
+                   memory_per_device: float, model_flops_global: float,
+                   model_bytes_global: float = 0.0,
+                   platform: Platform = ROOFLINE_PLATFORM,
+                   precomputed: Optional[HLOStats] = None) -> RooflineReport:
+    stats = precomputed if precomputed is not None else analyze_hlo(hlo_text)
+    ca_flops = float(cost.get("flops", 0.0))
+    ca_bytes = float(cost.get("bytes accessed", 0.0))
+    has_loops = '"known_trip_count"' in hlo_text
+    flops = stats.flops if (has_loops or stats.flops > ca_flops) else ca_flops
+    hbm = stats.hbm_bytes if (has_loops or stats.hbm_bytes > ca_bytes) else ca_bytes
+
+    peak = platform.peak_flops_bf16
+    t_c = flops / peak
+    t_m = hbm / platform.hbm_bw
+    # a chip's egress is spread over its links; standard ring estimate
+    t_x = stats.total_collective_bytes / (platform.ici_bw_per_link
+                                          * platform.ici_links)
+    bottleneck = ("compute" if t_c >= max(t_m, t_x) else
+                  "memory" if t_m >= t_x else "collective")
+    useful = model_flops_global / max(flops * n_chips, 1.0)
+    # The ideal step time is bounded by BOTH the compute floor (useful
+    # flops at peak) and the memory floor (minimum necessary bytes at full
+    # HBM bandwidth) — decode steps are legitimately memory-floor-bound.
+    t_ideal = max(model_flops_global / (n_chips * peak),
+                  model_bytes_global / (n_chips * platform.hbm_bw))
+    frac = t_ideal / max(t_c, t_m, t_x, 1e-30)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=hbm,
+        collective_bytes=stats.total_collective_bytes,
+        collective_breakdown=dict(stats.collective_bytes),
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops_global=model_flops_global,
+        useful_ratio=useful, roofline_fraction=frac,
+        cost_analysis_flops=ca_flops, cost_analysis_bytes=ca_bytes,
+        memory_per_device_bytes=memory_per_device)

@@ -1,0 +1,2 @@
+from .train_step import make_train_step, TrainState  # noqa: F401
+from .serve_step import make_prefill_step, make_decode_step  # noqa: F401

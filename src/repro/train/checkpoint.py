@@ -1,0 +1,152 @@
+"""Distributed checkpointing: per-shard npz + manifest, atomic, async.
+
+Layout (one directory per step):
+  ckpt_dir/step_000100.tmp/         <- written first
+      manifest.json                  (step, tree structure, shard map)
+      shard_00000.npz ...            (one file per host in production;
+                                      one file here)
+  ckpt_dir/step_000100/             <- atomic rename on completion
+
+Properties:
+  * atomicity — readers only ever see fully-written checkpoints (rename is
+    the commit point); a crashed writer leaves only a .tmp dir that the
+    next writer garbage-collects;
+  * async — ``save_async`` snapshots arrays on host then writes in a
+    background thread, so the train loop is blocked only for the device->
+    host copy;
+  * resharding restore — arrays are saved unsharded per-leaf here (CPU
+    container); ``restore`` accepts a target sharding pytree and puts
+    leaves accordingly, so mesh-shape changes between runs are fine
+    (elastic restarts, DESIGN.md §6);
+  * retention — ``keep`` most recent checkpoints are retained.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._gc_tmp()
+
+    # ------------------------------------------------------------------ io
+    def _gc_tmp(self) -> None:
+        for p in self.dir.glob("*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        """Synchronous atomic save."""
+        host_tree = jax.tree.map(np.asarray, tree)
+        return self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None) -> None:
+        """Device->host copy now; file IO in a background thread."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: Dict) -> Path:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self._step_dir(step)
+        shutil.rmtree(tmp, ignore_errors=True)
+        tmp.mkdir(parents=True)
+        named = _flatten_with_names(host_tree)
+        arrays = {f"leaf_{i}": np.asarray(v) for i, (_, v) in enumerate(named)}
+        np.savez(tmp / "shard_00000.npz", **arrays)
+        manifest = {
+            "step": step,
+            "names": [n for n, _ in named],
+            "extra": extra,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        shutil.rmtree(final, ignore_errors=True)
+        tmp.rename(final)
+        self._retain()
+        return final
+
+    def _retain(self) -> None:
+        steps = sorted(self.available_steps())
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def available_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree: Any,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``target_tree``; optionally place
+        leaves with a matching sharding pytree (resharding restore)."""
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shard_00000.npz")
+        by_name = {n: data[f"leaf_{i}"]
+                   for i, n in enumerate(manifest["names"])}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        leaves = []
+        shard_flat = (jax.tree.leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        for (path, leaf), sh in zip(flat, shard_flat):
+            name = "/".join(_key_str(k) for k in path)
+            if name not in by_name:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            arr = by_name[name]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {name}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            arr = arr.astype(leaf.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["extra"]

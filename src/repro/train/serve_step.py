@@ -1,0 +1,27 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``prefill_step(params, batch) -> (next_token_logits, cache)``
+``decode_step(params, cache, token, pos) -> (logits, new_cache)``
+
+Both are pure and are the exact functions the dry-run lowers for the
+``prefill_*`` / ``decode_*`` / ``long_*`` shapes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..models.model import Model
+
+
+def make_prefill_step(model: Model, *, attn_chunk: int = 1024,
+                      cache_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, attn_chunk=attn_chunk,
+                             cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+    return decode_step

@@ -1,0 +1,87 @@
+"""Characterization loop end-to-end on a small corpus (paper §3.5/§4.3)."""
+import numpy as np
+
+from repro.core import (PLATFORMS, TPU_V4, TPU_V5E, build_slice,
+                        characterize_slice, compare_platforms, corpus,
+                        grouped_importance, run_spadd_model, run_spgemm_model,
+                        run_spmv_model, ScheduleTuner, Schedule,
+                        select_moe_block_size)
+
+MATS = corpus(n_matrices=18, n_min=256, n_max=512, seed=7)
+
+
+def test_build_slice_shapes():
+    data = build_slice("spmv", MATS, TPU_V5E)
+    assert data.X.shape[0] == len(MATS)
+    assert data.X.shape[1] == len(data.feature_names)
+    assert set(data.y) == {"gflops", "bandwidth_gbps", "throughput_miters"}
+    assert np.isfinite(data.X).all()
+
+
+def test_characterize_slice_outputs():
+    data = build_slice("spadd", MATS, TPU_V5E)
+    res = characterize_slice(data, "gflops", k=5)
+    assert 0 <= res.cv["mape"]
+    assert res.importances, "importances must be non-empty"
+    total = sum(v for _, v in res.importances)
+    assert abs(total - 1.0) < 1e-6
+
+
+def test_compare_platforms_structure():
+    results = []
+    for kern in ("spmv", "spadd"):
+        for plat in (TPU_V4, TPU_V5E):
+            data = build_slice(kern, MATS, plat)
+            results.append(characterize_slice(data, "gflops", k=4))
+    cmp = compare_platforms(results, top=5)
+    assert set(cmp) == {"spmv", "spadd"}
+    for kern in cmp.values():
+        assert set(kern) == {"algorithm_intrinsic", "architecture_induced"}
+
+
+def test_grouped_importance_buckets():
+    data = build_slice("spmv", MATS, TPU_V5E)
+    res = characterize_slice(data, "gflops", k=4)
+    g = grouped_importance(res)
+    assert set(g) == {"locality", "branch/irregularity", "imbalance", "size"}
+    assert all(v >= 0 for v in g.values())
+
+
+def test_perfmodel_targets_positive():
+    _, _, A = MATS[0]
+    for fn in (run_spmv_model,):
+        c, t, tg = fn(A, TPU_V5E)
+        assert t["t_total"] > 0
+        assert tg["gflops"] > 0
+    c, t, tg = run_spgemm_model(A, A, TPU_V5E)
+    assert tg["gflops"] > 0
+    B = A.transpose()
+    c, t, tg = run_spadd_model(A, B, TPU_V5E)
+    assert tg["gflops"] > 0
+
+
+def test_platform_ordering_on_streaming_kernel():
+    """SpADD is bandwidth-bound (paper §4.3.3): the platform with the
+    highest HBM bandwidth must never be slower."""
+    _, _, A = MATS[1]
+    B = A.transpose()
+    from repro.core import TPU_V5P
+    t_v4 = run_spadd_model(A, B, TPU_V4)[1]["t_total"]
+    t_v5p = run_spadd_model(A, B, TPU_V5P)[1]["t_total"]
+    assert t_v5p <= t_v4
+
+
+def test_autotuner_selects_and_verifies():
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(MATS, max_mats=10)
+    _, _, A = MATS[2]
+    sched, info = tuner.select(A)
+    assert isinstance(sched, Schedule)
+    assert sched.backend in ("bsr", "dense")
+    assert info["verified_time_s"] > 0
+
+
+def test_moe_block_size_heuristic():
+    balanced = np.full(16, 100.0)
+    skewed = np.array([1500.0] + [10.0] * 15)
+    assert select_moe_block_size(balanced, 512, TPU_V5E) == 256
+    assert select_moe_block_size(skewed, 512, TPU_V5E) <= 128

@@ -1,0 +1,66 @@
+"""CART regressor + CV protocol (paper §3.5, §4.1)."""
+import numpy as np
+import pytest
+
+from repro.core import DecisionTreeRegressor, kfold_cv, mape, r2_score
+
+
+def _toy(n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, 4))
+    y = np.where(X[:, 2] > 0.5, 10.0, 1.0) + 0.01 * X[:, 0]
+    return X, y
+
+
+def test_fit_predict_recovers_split():
+    X, y = _toy()
+    tree = DecisionTreeRegressor(max_depth=4).fit(X, y)
+    pred = tree.predict(X)
+    assert mape(y, pred) < 0.05
+    # the informative feature dominates importance
+    assert int(np.argmax(tree.feature_importances_)) == 2
+    assert tree.feature_importances_[2] > 0.9
+
+
+def test_importances_normalized():
+    X, y = _toy()
+    tree = DecisionTreeRegressor().fit(X, y)
+    assert tree.feature_importances_.sum() == pytest.approx(1.0)
+    assert (tree.feature_importances_ >= 0).all()
+
+
+def test_kfold_cv_protocol():
+    X, y = _toy(600)
+    cv = kfold_cv(X, y, k=10)
+    assert cv["mape"] < 0.1
+    assert cv["r2"] > 0.8
+    assert cv["median_abs_norm_residual"] < 0.05
+
+
+def test_predictions_within_target_range():
+    X, y = _toy()
+    tree = DecisionTreeRegressor().fit(X, y)
+    pred = tree.predict(np.random.default_rng(1).random((100, 4)) * 3 - 1)
+    assert pred.min() >= y.min() - 1e-9
+    assert pred.max() <= y.max() + 1e-9
+
+
+def test_constant_target():
+    X = np.random.default_rng(0).random((50, 3))
+    y = np.full(50, 7.0)
+    tree = DecisionTreeRegressor().fit(X, y)
+    assert np.allclose(tree.predict(X), 7.0)
+    assert tree.depth() == 1
+
+
+def test_r2_and_mape_edge_cases():
+    y = np.array([1.0, 2.0, 3.0])
+    assert r2_score(y, y) == pytest.approx(1.0)
+    assert mape(y, y) == pytest.approx(0.0)
+
+
+def test_nan_features_do_not_crash():
+    X, y = _toy(100)
+    X[::7, 1] = np.nan
+    tree = DecisionTreeRegressor().fit(X, y)
+    assert np.isfinite(tree.predict(X)).all()

@@ -1,0 +1,86 @@
+"""Fault-tolerance mechanisms with simulated failures."""
+import pytest
+
+from repro.train.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                         StragglerDetector,
+                                         plan_elastic_restart,
+                                         run_with_restarts)
+
+
+def test_heartbeat_detects_silent_host():
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0)
+    mon.beat("h0", now=100.0)
+    mon.beat("h1", now=100.0)
+    mon.beat("h0", now=120.0)
+    assert mon.dead_hosts(now=121.0) == ["h1"]
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(k=3.0, patience=2)
+    for step in range(4):
+        for h in ("h0", "h1", "h2", "h3"):
+            det.record(h, 1.0 + (2.0 if h == "h3" else 0.0)
+                       + 0.01 * step)
+        stragglers = det.stragglers()
+    assert stragglers == ["h3"]
+
+
+def test_straggler_needs_patience():
+    det = StragglerDetector(k=3.0, patience=3)
+    for h in ("h0", "h1", "h2"):
+        det.record(h, 1.0)
+    det.record("h3", 9.0)
+    assert det.stragglers() == []  # one strike only
+
+
+def test_elastic_plan_drops_pod_keeps_tp():
+    plan = plan_elastic_restart(total_hosts=64, dead=["pod1:h3"],
+                                hosts_per_pod=32, model_axis=16,
+                                data_axis=16, resume_step=100)
+    assert plan.mesh_shape == (16, 16)          # one pod left -> 2D mesh
+    assert plan.axis_names == ("data", "model")
+    assert plan.dropped_hosts == ("pod1",)
+    assert plan.resume_step == 100
+
+
+def test_elastic_plan_multi_pod_survivors():
+    plan = plan_elastic_restart(total_hosts=96, dead=["pod2:h0"],
+                                hosts_per_pod=32, model_axis=16,
+                                data_axis=16, resume_step=None)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+
+
+def test_run_with_restarts_completes_through_failures():
+    executed = []
+    saved = {"step": 0}
+
+    def step_fn(step):
+        executed.append(step)
+
+    def save_fn(step):
+        saved["step"] = step
+
+    def restore_fn():
+        return saved["step"]
+
+    res = run_with_restarts(
+        step_fn, n_steps=20, save_every=5, save_fn=save_fn,
+        restore_fn=restore_fn,
+        failure_schedule={7: RuntimeError("preempted"),
+                          13: OSError("node died")})
+    assert res["final_step"] == 20
+    assert res["restarts"] == 2
+    # steps 5..7 replayed after the first failure (restore at 5)
+    assert executed.count(6) >= 2
+
+
+def test_run_with_restarts_gives_up():
+    def bad_restore():
+        return 0
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(lambda s: None, n_steps=5, save_every=100,
+                          save_fn=lambda s: None, restore_fn=bad_restore,
+                          failure_schedule={0: RuntimeError("x")},
+                          max_restarts=0)

@@ -1,0 +1,206 @@
+"""Per-kernel allclose vs ref.py oracle: shape/dtype sweeps, both the jnp
+and the Pallas-interpret backends (kernel body executed on CPU)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CSR
+from repro.kernels import (bsr_spadd, bsr_spgemm, bsr_spmv, flash_attention,
+                           moe_gmm)
+
+RNG = np.random.default_rng(42)
+
+
+def _sparse(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((n, m)) < density) * rng.standard_normal((n, m))
+    return CSR.from_dense(d.astype(np.float32))
+
+
+# ------------------------------------------------------------------ SpMV
+@pytest.mark.parametrize("n,bs", [(64, 8), (100, 16), (257, 32), (512, 128),
+                                  (96, 96)])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bsr_spmv_allclose(n, bs, backend):
+    csr = _sparse(n, n, 0.06, n)
+    x = RNG.standard_normal(n).astype(np.float32)
+    ell = bsr_spmv.ops.prepare(csr, bs)
+    y = np.asarray(bsr_spmv.bsr_spmv(ell, jnp.asarray(x), backend=backend))
+    ref = bsr_spmv.ops.spmv_oracle(csr, x)
+    np.testing.assert_allclose(y, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_bsr_spmv_rectangular():
+    csr = _sparse(120, 250, 0.05, 7)
+    x = RNG.standard_normal(250).astype(np.float32)
+    ell = bsr_spmv.ops.prepare(csr, 32)
+    y = np.asarray(bsr_spmv.bsr_spmv(ell, jnp.asarray(x), backend="interpret"))
+    np.testing.assert_allclose(y, bsr_spmv.ops.spmv_oracle(csr, x),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bsr_spmv_ell_capacity_drop():
+    """ELL with capped blocks/row drops lowest-priority blocks (documented
+    capacity semantics, mirrored by counters.dropped_nnz_fraction)."""
+    csr = _sparse(128, 128, 0.2, 3)
+    ell = bsr_spmv.ops.prepare(csr, 16, max_blocks=2)
+    assert ell.max_blocks == 2
+
+
+# ------------------------------------------------------------------ SpADD
+@pytest.mark.parametrize("n,bs", [(64, 8), (90, 16), (200, 32)])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bsr_spadd_allclose(n, bs, backend):
+    a, b_ = _sparse(n, n, 0.05, n), _sparse(n, n, 0.05, n + 1)
+    c = bsr_spadd.bsr_spadd(a, b_, block_size=bs, backend=backend)
+    np.testing.assert_allclose(c.to_dense(), a.to_dense() + b_.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spadd_symbolic_union():
+    from repro.core import BSR
+    a, b_ = _sparse(64, 64, 0.05, 1), _sparse(64, 64, 0.05, 2)
+    ba, bb = BSR.from_csr(a, 16), BSR.from_csr(b_, 16)
+    c_ptrs, c_cols, ia, ib = bsr_spadd.spadd_symbolic(ba, bb)
+    assert c_ptrs[-1] == len(c_cols) == len(ia) == len(ib)
+    # union size >= each input's block count
+    assert len(c_cols) >= max(ba.n_blocks, bb.n_blocks)
+
+
+# ----------------------------------------------------------------- SpGEMM
+@pytest.mark.parametrize("n,bs", [(48, 8), (64, 16), (130, 32)])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bsr_spgemm_allclose(n, bs, backend):
+    a, b_ = _sparse(n, n, 0.08, n), _sparse(n, n, 0.08, n + 5)
+    c = bsr_spgemm.bsr_spgemm(a, b_, block_size=bs, backend=backend)
+    ref = a.to_dense() @ b_.to_dense()
+    np.testing.assert_allclose(c.to_dense(), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_bsr_spgemm_rectangular():
+    a = _sparse(60, 90, 0.1, 11)
+    b_ = _sparse(90, 40, 0.1, 12)
+    c = bsr_spgemm.bsr_spgemm(a, b_, block_size=16, backend="jnp")
+    np.testing.assert_allclose(c.to_dense(), a.to_dense() @ b_.to_dense(),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- MoE GMM
+@pytest.mark.parametrize("tm", [32, 64])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_moe_gmm_allclose(tm, backend):
+    T, K, N, E = 200, 64, 96, 3
+    tokens = RNG.standard_normal((T, K)).astype(np.float32)
+    eot = RNG.integers(0, E, T)
+    x, tile_e, inv = moe_gmm.route_and_pad(tokens, eot, E, tile_m=tm)
+    w = RNG.standard_normal((E, K, N)).astype(np.float32)
+    out = np.asarray(moe_gmm.moe_gmm(jnp.asarray(tile_e), jnp.asarray(x),
+                                     jnp.asarray(w), tile_m=tm, tile_n=32,
+                                     tile_k=32, backend=backend))
+    valid = inv >= 0
+    expect = np.einsum("mk,mkn->mn", tokens[inv[valid]], w[eot[inv[valid]]])
+    np.testing.assert_allclose(out[valid], expect, rtol=2e-4, atol=2e-4)
+
+
+def test_route_and_pad_inverse_property():
+    T, E, tm = 133, 4, 32
+    tokens = RNG.standard_normal((T, 8)).astype(np.float32)
+    eot = RNG.integers(0, E, T)
+    x, tile_e, inv = moe_gmm.route_and_pad(tokens, eot, E, tile_m=tm)
+    # every source token appears exactly once
+    assert sorted(inv[inv >= 0].tolist()) == list(range(T))
+    # rows grouped consistently with tile_expert
+    tok_expert = np.repeat(tile_e, tm)
+    for i, src in enumerate(inv):
+        if src >= 0:
+            assert tok_expert[i] == eot[src]
+
+
+# --------------------------------------------------------- Flash attention
+@pytest.mark.parametrize("s,d,bq,bk", [(128, 32, 32, 32), (256, 64, 64, 128),
+                                       (128, 128, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_allclose(s, d, bq, bk, causal):
+    q = RNG.standard_normal((2, s, d)).astype(np.float32)
+    k = RNG.standard_normal((2, s, d)).astype(np.float32)
+    v = RNG.standard_normal((2, s, d)).astype(np.float32)
+    out = np.asarray(flash_attention.flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+        block_q=bq, block_k=bk, backend="interpret"))
+    ref = np.asarray(flash_attention.ref_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_attention():
+    """The Pallas kernel and the model's jnp chunked attention agree."""
+    from repro.configs import get_config
+    from repro.models.attention import chunked_attention
+    cfg = get_config("llama3.2-3b", reduced=True)
+    B, S, H, D = 2, 128, 4, 16
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    out_model = chunked_attention(cfg, q, k, v, causal=True, chunk=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out_kernel = flash_attention.flash_attention(
+        qf, kf, vf, causal=True, block_q=32, block_k=32, backend="interpret")
+    out_kernel = out_kernel.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kernel),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- dtype sweep
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), ("bfloat16", 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    s, d = 128, 64
+    q = RNG.standard_normal((2, s, d)).astype(np.float32)
+    k = RNG.standard_normal((2, s, d)).astype(np.float32)
+    v = RNG.standard_normal((2, s, d)).astype(np.float32)
+    jd = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    out = np.asarray(flash_attention.flash_attention(
+        jnp.asarray(q, jd), jnp.asarray(k, jd), jnp.asarray(v, jd),
+        causal=True, block_q=64, block_k=64, backend="interpret"),
+        dtype=np.float32)
+    ref = np.asarray(flash_attention.ref_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True))
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_moe_gmm_dtypes(dtype, tol):
+    T, K, N, E, tm = 128, 32, 64, 2, 32
+    tokens = RNG.standard_normal((T, K)).astype(np.float32)
+    eot = RNG.integers(0, E, T)
+    x, tile_e, inv = moe_gmm.route_and_pad(tokens, eot, E, tile_m=tm)
+    w = RNG.standard_normal((E, K, N)).astype(np.float32)
+    out = np.asarray(moe_gmm.moe_gmm(
+        jnp.asarray(tile_e), jnp.asarray(x, dtype), jnp.asarray(w, dtype),
+        tile_m=tm, tile_n=32, tile_k=32, backend="interpret"),
+        dtype=np.float32)
+    valid = inv >= 0
+    expect = np.einsum("mk,mkn->mn", tokens[inv[valid]], w[eot[inv[valid]]])
+    scale = np.abs(expect).max()
+    np.testing.assert_allclose(out[valid] / scale, expect / scale,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_bsr_spmv_dtypes(dtype, tol):
+    csr = _sparse(128, 128, 0.08, 21)
+    x = RNG.standard_normal(128).astype(np.float32)
+    ell = bsr_spmv.ops.prepare(csr, 32)
+    idx, cols, blocks, _ = bsr_spmv.ops.ell_device_arrays(ell)
+    from repro.kernels.bsr_spmv.kernel import bsr_spmv_pallas
+    n_bc = -(-128 // 32)
+    xb = jnp.asarray(np.pad(x, (0, n_bc * 32 - 128)).reshape(n_bc, 32), dtype)
+    y = np.asarray(bsr_spmv_pallas(idx, cols, blocks.astype(dtype), xb,
+                                   interpret=True), dtype=np.float32)
+    ref = bsr_spmv.ops.spmv_oracle(csr, x)
+    scale = max(np.abs(ref).max(), 1e-6)
+    np.testing.assert_allclose(y.reshape(-1)[:128] / scale, ref / scale,
+                               rtol=tol, atol=tol)

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import (CSR, BSR, ELLBSR, branch_entropy, index_affinity,
+                        partition_imbalance, reuse_affinity)
+from repro.core.decision_tree import DecisionTreeRegressor
+from repro.kernels import bsr_spmv
+from repro.models.layers import softcap
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _dense_strategy(max_n=24):
+    return hnp.arrays(np.float32, st.tuples(st.integers(1, max_n),
+                                            st.integers(1, max_n)),
+                      elements=st.sampled_from([0.0, 0.0, 0.0, 1.0, -2.0,
+                                                0.5]))
+
+
+@given(_dense_strategy())
+@settings(**SETTINGS)
+def test_csr_dense_roundtrip(d):
+    np.testing.assert_array_equal(CSR.from_dense(d).to_dense(), d)
+
+
+@given(_dense_strategy(), st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_bsr_ell_format_equivalence(d, bs):
+    csr = CSR.from_dense(d)
+    bsr = BSR.from_csr(csr, bs)
+    np.testing.assert_allclose(bsr.to_dense(), d, atol=0)
+    ell = ELLBSR.from_bsr(bsr)
+    # ELL with full capacity preserves every block
+    assert int(ell.valid_counts.sum()) == bsr.n_blocks
+
+
+@given(_dense_strategy())
+@settings(**SETTINGS)
+def test_metric_ranges(d):
+    csr = CSR.from_dense(d)
+    assert 0.0 <= branch_entropy(csr) <= 1.0
+    if csr.nnz:
+        assert 0.0 < reuse_affinity(csr) <= 1.0
+        assert 0.0 < index_affinity(csr) <= 1.0
+
+
+@given(_dense_strategy())
+@settings(**SETTINGS)
+def test_branch_entropy_row_permutation_invariant(d):
+    csr = CSR.from_dense(d)
+    perm = np.random.default_rng(0).permutation(d.shape[0])
+    csr_p = CSR.from_dense(d[perm])
+    assert abs(branch_entropy(csr) - branch_entropy(csr_p)) < 1e-12
+
+
+@given(hnp.arrays(np.float64, st.integers(1, 64),
+                  elements=st.floats(0, 100)),
+       st.integers(1, 8))
+@settings(**SETTINGS)
+def test_partition_imbalance_nonnegative(w, t):
+    v = partition_imbalance(w, t)
+    assert v >= 0.0
+    if w.sum() > 0 and np.allclose(w, w[0]) and len(w) % t == 0:
+        assert v < 1e-9
+
+
+@given(st.integers(10, 200), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_tree_predictions_bounded(n, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, 3))
+    y = rng.random(n) * 100
+    tree = DecisionTreeRegressor(max_depth=6).fit(X, y)
+    pred = tree.predict(rng.random((32, 3)) * 2 - 0.5)
+    assert pred.min() >= y.min() - 1e-9
+    assert pred.max() <= y.max() + 1e-9
+
+
+@given(st.integers(8, 64), st.sampled_from([4, 8, 16]), st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_spmv_jnp_matches_dense_oracle(n, bs, seed):
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((n, n)) < 0.15) * rng.standard_normal((n, n))
+         ).astype(np.float32)
+    csr = CSR.from_dense(d)
+    x = rng.standard_normal(n).astype(np.float32)
+    ell = bsr_spmv.ops.prepare(csr, bs)
+    y = np.asarray(bsr_spmv.bsr_spmv(ell, jnp.asarray(x), backend="jnp"))
+    np.testing.assert_allclose(y, d @ x, rtol=1e-4, atol=1e-4)
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 32),
+                  elements=st.floats(-1e4, 1e4, width=32)),
+       st.sampled_from([10.0, 30.0, 50.0]))
+@settings(**SETTINGS)
+def test_softcap_bounded(x, cap):
+    y = np.asarray(softcap(jnp.asarray(x), cap))
+    assert np.all(np.abs(y) <= cap + 1e-3)
+    # monotone: order preserved
+    order = np.argsort(x)
+    assert (np.diff(y[order]) >= -1e-6).all()
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_moe_dispatch_conservation(e_pow, k, seed):
+    """With ample capacity, MoE combine preserves every token's weighted
+    expert outputs: sum of gate weights per token == 1."""
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(get_config("mixtral-8x22b", reduced=True),
+                              n_experts=2 ** min(e_pow, 3),
+                              top_k=min(k, 2 ** min(e_pow, 3)),
+                              capacity_factor=8.0)
+    rng = np.random.default_rng(seed)
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(seed))
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)), jnp.bfloat16)
+    out, metrics = moe_mod.apply_moe(cfg, p, x)
+    assert out.shape == x.shape
+    assert float(metrics["dropped_fraction"]) == 0.0

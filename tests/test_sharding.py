@@ -1,0 +1,102 @@
+"""Sharding rules: spec validity, divisibility, and a real 1-device lower."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_debug_mesh
+from repro.models import Model
+
+
+MESH = make_debug_mesh(1, 1)
+
+
+def _mesh_16x16_like():
+    """A fake mesh object exposing shape/axis_names for rule math."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    return FakeMesh()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_cover_tree_and_divide(arch):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    params = model.abstract_params()
+    mesh = _mesh_16x16_like()
+    specs = shd.param_specs(cfg, params, mesh)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_logical_rules_consistency(arch):
+    cfg = get_config(arch)
+    mesh = _mesh_16x16_like()
+    rules = shd.logical_rules(cfg, mesh, batch_size=256, seq_len=4096)
+    if cfg.n_heads and cfg.n_heads % 16 == 0:
+        assert rules["heads"] == "model"
+        assert rules["attn_q_seq"] is None
+    elif cfg.n_heads:
+        assert rules["heads"] is None
+        assert rules["attn_q_seq"] == "model"
+    if cfg.is_moe:
+        ep = cfg.n_experts % 16 == 0
+        assert (rules["experts"] == "model") == ep
+        if ep:
+            assert rules["moe_ffn"] is None  # no duplicate model axis
+
+
+def test_batch_replicated_when_indivisible():
+    cfg = get_config("mamba2-780m")
+    mesh = _mesh_16x16_like()
+    rules = shd.logical_rules(cfg, mesh, batch_size=1)
+    assert rules["batch"] is None
+
+
+def test_lower_train_step_on_debug_mesh():
+    """End-to-end: specs + logical rules lower a sharded train step."""
+    from repro.models.partitioning import logical_axis_rules
+    from repro.optim.adamw import AdamW
+    from repro.train.train_step import make_train_step
+    import jax.numpy as jnp
+
+    cfg = get_config("llama3.2-3b", reduced=True)
+    model = Model(cfg)
+    opt = AdamW(learning_rate=1e-3)
+    rules = shd.logical_rules(cfg, MESH, batch_size=2, seq_len=64)
+    step = make_train_step(model, opt, remat="none", attn_chunk=32)
+    with logical_axis_rules(MESH, rules), MESH:
+        params = model.abstract_params()
+        opt_state = jax.eval_shape(opt.init, params)
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+                 "loss_mask": jax.ShapeDtypeStruct((2, 64), jnp.float32)}
+        lowered = jax.jit(step).lower(params, opt_state, batch)
+        compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_cache_specs_seq_over_model():
+    cfg = get_config("llama3.2-3b")
+    model = Model(cfg)
+    cache = model.abstract_cache(128, 32768)
+    mesh = _mesh_16x16_like()
+    specs = shd.cache_specs(cfg, cache, mesh, batch_size=128)
+    k_spec = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert "model" in tuple(k_spec)

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests: training converges, serving generates,
+characterization loop reproduces the paper's qualitative findings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_training_loss_decreases(tmp_path):
+    """A reduced llama trains for 40 steps on the synthetic stream and the
+    loss drops substantially (the pipeline's motif structure is learnable)."""
+    from repro.launch.train import main
+    res = main(["--arch", "llama3.2-3b", "--reduced", "--steps", "40",
+                "--batch", "8", "--seq", "64", "--lr", "3e-3",
+                "--ckpt-dir", str(tmp_path / "ckpt"), "--save-every", "100",
+                "--attn-chunk", "32"])
+    losses = res["losses"]
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_training_restart_path(tmp_path):
+    from repro.launch.train import main
+    res = main(["--arch", "mamba2-780m", "--reduced", "--steps", "12",
+                "--batch", "4", "--seq", "64", "--ckpt-dir",
+                str(tmp_path / "ckpt"), "--save-every", "4",
+                "--simulate-failures", "--attn-chunk", "32"])
+    assert res["final_step"] == 12
+    assert res["restarts"] == 2
+
+
+def test_serving_generates_tokens():
+    from repro.launch.serve import main
+    res = main(["--arch", "gemma2-9b", "--reduced", "--requests", "4",
+                "--batch", "2", "--prompt-len", "32", "--gen-len", "8",
+                "--attn-chunk", "32"])
+    assert res["throughput_tok_s"] > 0
+    outs = np.concatenate(res["outputs"])
+    assert outs.shape[1] == 8
+    assert (outs >= 0).all()
+
+
+def test_microbatched_grads_match_full_batch():
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.optim.adamw import AdamW
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config("phi4-mini-3.8b", reduced=True)
+    model = Model(cfg)
+    opt = AdamW(learning_rate=1e-2)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 64)),
+                                   jnp.int32)}
+    params = model.init(jax.random.PRNGKey(0))
+    s1 = make_train_step(model, opt, remat="none", attn_chunk=32,
+                         microbatches=1)
+    s2 = make_train_step(model, opt, remat="none", attn_chunk=32,
+                         microbatches=2)
+    p1, _, m1 = s1(params, opt.init(params), batch)
+    p2, _, m2 = s2(params, opt.init(params), batch)
+    # same loss (averaged) and near-identical updated params
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-2
+
+
+def test_charloop_reproduces_paper_findings():
+    """Paper §4.3 headline: SpADD's tree is dominated by branch/irregularity
+    features; SpMV's by locality+size structure (not pure branch)."""
+    from repro.core import (TPU_V4, build_slice, characterize_slice, corpus,
+                            grouped_importance)
+    mats = corpus(n_matrices=36, n_min=256, n_max=1024, seed=11)
+    spadd = characterize_slice(build_slice("spadd", mats, TPU_V4), "gflops",
+                               k=4)
+    g_spadd = grouped_importance(spadd)
+    assert g_spadd["branch/irregularity"] > g_spadd["locality"]
+    spmv = characterize_slice(build_slice("spmv", mats, TPU_V4), "gflops",
+                              k=4)
+    g_spmv = grouped_importance(spmv)
+    assert g_spmv["locality"] + g_spmv["size"] + g_spmv["branch/irregularity"] > 0.5
