@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (GENERATORS, TPU_V5E, ScheduleTuner, corpus,
-                        run_spmv_model)
+                        run_spmv_model, run_spmv_sell_model)
 from repro.core.counters import BYTES_F32, vmem_scale_for
 from repro.kernels import bsr_spmv
 from .common import FULL, Row, time_call
@@ -66,8 +66,12 @@ def run() -> List[Row]:
              else mats[0][2])
         t_base = _scalar_gather_model(A, TPU_V5E)
         sched, info = tuner.select(A)
-        _, t_opt, _ = run_spmv_model(A, TPU_V5E, sched.block_size,
-                                     sched.ell_quantile)
+        if sched.layout == "sell":
+            _, t_opt, _ = run_spmv_sell_model(A, TPU_V5E, sched.block_size,
+                                              sched.slice_height)
+        else:
+            _, t_opt, _ = run_spmv_model(A, TPU_V5E, sched.block_size,
+                                         sched.ell_quantile)
         sp = t_base / t_opt["t_total"]
         speedups.append(sp)
         # measured CPU: jnp gather vs blocked einsum backend
@@ -75,12 +79,16 @@ def run() -> List[Row]:
                         jnp.float32)
         gather_fn = _spmv_jnp_gather(A, x)
         us_gather = time_call(gather_fn)
-        ell = bsr_spmv.ops.prepare(A, min(sched.block_size, 128))
+        bs_cpu = min(sched.block_size, 128)
+        a_prepped = (bsr_spmv.ops.prepare_sell(A, bs_cpu, sched.slice_height)
+                     if sched.layout == "sell"
+                     else bsr_spmv.ops.prepare(A, bs_cpu))
         us_block = time_call(
-            lambda: np.asarray(bsr_spmv.bsr_spmv(ell, x, backend="jnp")))
+            lambda: np.asarray(bsr_spmv.bsr_spmv(a_prepped, x, backend="jnp")))
         rows.append((f"hillclimb/spmv/{cat}", us_block,
-                     f"modeled_speedup={sp:.2f}x;sched=bs{sched.block_size}"
-                     f"q{sched.ell_quantile};cpu_gather_us={us_gather:.0f};"
+                     f"modeled_speedup={sp:.2f}x;sched={sched.layout}-"
+                     f"bs{sched.block_size}q{sched.ell_quantile}"
+                     f"C{sched.slice_height};cpu_gather_us={us_gather:.0f};"
                      f"cpu_blocked_us={us_block:.0f}"))
     rows.append(("hillclimb/spmv/summary", 0.0,
                  f"geomean_modeled_speedup="

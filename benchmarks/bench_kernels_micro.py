@@ -1,5 +1,8 @@
 """Wall-clock microbenchmarks of the five kernels (jnp backend on CPU;
-the Pallas TPU schedules are exercised in interpret mode by tests)."""
+the Pallas TPU schedules are exercised in interpret mode by tests), plus
+the host-side ``prepare()`` format-conversion pipeline — prep is on the
+serving path, so it gets its own rows, including the speedup of the
+vectorized ``ELLBSR.from_bsr`` over the seed's per-row Python loop."""
 from __future__ import annotations
 
 from typing import List
@@ -8,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CSR
+from repro.core.csr import ELLBSR
+from repro.core.synthetic import gen_zipf
 from repro.kernels import (bsr_spadd, bsr_spgemm, bsr_spmv, flash_attention,
                            moe_gmm)
 from .common import FULL, Row, time_call
@@ -21,16 +26,74 @@ def _sparse(n, density=0.05, seed=0):
     return CSR.from_dense(d.astype(np.float32))
 
 
+def _ell_from_bsr_rowloop(bsr):
+    """The seed's per-row ELL construction (full container, including the
+    zero-block concatenate): the 'before' point for the vectorized
+    ``ELLBSR.from_bsr`` prep speedup row."""
+    bpr = bsr.blocks_per_row()
+    mb = max(int(bpr.max()) if bpr.size else 1, 1)
+    n_br = bsr.n_block_rows
+    zero_idx = bsr.n_blocks
+    block_indices = np.full((n_br, mb), zero_idx, dtype=np.int32)
+    block_cols = np.zeros((n_br, mb), dtype=np.int32)
+    for br in range(n_br):
+        lo, hi = int(bsr.block_ptrs[br]), int(bsr.block_ptrs[br + 1])
+        take = min(hi - lo, mb)
+        block_indices[br, :take] = np.arange(lo, lo + take, dtype=np.int32)
+        block_cols[br, :take] = bsr.block_cols[lo: lo + take]
+    blocks = np.concatenate(
+        [bsr.blocks, np.zeros((1, bsr.block_size, bsr.block_size), np.float32)],
+        axis=0)
+    return ELLBSR(block_indices, block_cols, blocks, bsr.shape, bsr.block_size,
+                  np.minimum(bpr, mb).astype(np.int32))
+
+
 def run() -> List[Row]:
     n = 2048 if FULL else 512
     rows: List[Row] = []
     A, B = _sparse(n, seed=1), _sparse(n, seed=2)
     x = jnp.asarray(RNG.standard_normal(n), jnp.float32)
 
+    # ------------------------------------------------ host prep (ELL / SELL)
+    # Prep-bound shape: many block-rows, few blocks each (cyclic category) —
+    # the regime where per-row Python looping used to dominate prepare().
+    from repro.core.csr import BSR
+    from repro.core.synthetic import gen_cyclic
+    P = gen_cyclic(2 * n, seed=1)
+    bs_prep = 8
+    bsr = BSR.from_csr(P, bs_prep)
+    us_vec = time_call(lambda: ELLBSR.from_bsr(bsr), repeats=5)
+    us_loop = time_call(lambda: _ell_from_bsr_rowloop(bsr), repeats=5)
+    rows.append(("kernels/bsr_spmv_prepare_ell", us_vec,
+                 f"n={2 * n};bs={bs_prep};n_br={bsr.n_block_rows};"
+                 f"rowloop_us={us_loop:.0f};"
+                 f"vectorized_speedup={us_loop / max(us_vec, 1e-9):.2f}x"))
+    us_sell = time_call(lambda: bsr_spmv.ops.prepare_sell(P, bs_prep, 8, 64),
+                        repeats=5)
+    rows.append(("kernels/bsr_spmv_prepare_sell", us_sell,
+                 f"n={2 * n};bs={bs_prep};C=8;sigma=64;incl_bsr_from_csr"))
+
     ell = bsr_spmv.ops.prepare(A, 128)
     us = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(ell, x, backend="jnp")))
     rows.append(("kernels/bsr_spmv", us,
                  f"n={n};nnz={A.nnz};gflops={2*A.nnz/us/1e3:.2f}"))
+
+    # ------------------------------ SELL bucketed SpMV + multi-RHS SpMM path
+    Z = gen_zipf(n, seed=5)
+    bs_z = n // 16  # 16 block-rows: the acceptance shape at any bench scale
+    ell_z = bsr_spmv.ops.prepare(Z, bs_z)
+    sell_z = bsr_spmv.ops.prepare_sell(Z, bs_z, 8, 64)
+    us_ez = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(ell_z, x, backend="jnp")))
+    us_sz = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(sell_z, x, backend="jnp")))
+    rows.append(("kernels/bsr_spmv_sell_zipf", us_sz,
+                 f"n={n};ell_us={us_ez:.0f};"
+                 f"ell_pad={ell_z.ell_padding_fraction():.3f};"
+                 f"sell_pad={sell_z.sell_padding_fraction():.3f}"))
+    k = 8
+    X = jnp.asarray(RNG.standard_normal((n, k)), jnp.float32)
+    us_mm = time_call(lambda: np.asarray(bsr_spmv.bsr_spmm(sell_z, X, backend="jnp")))
+    rows.append(("kernels/bsr_spmm_sell_zipf", us_mm,
+                 f"n={n};k={k};per_rhs_us={us_mm / k:.1f};spmv_us={us_sz:.1f}"))
 
     us = time_call(lambda: bsr_spadd.bsr_spadd(A, B, 64, backend="jnp"))
     rows.append(("kernels/bsr_spadd", us, f"n={n}"))

@@ -1,6 +1,11 @@
 """Benchmark harness: one module per paper table/figure + the roofline table.
-Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_FULL=1 for the
-paper-scale corpus (600 matrices)."""
+Prints ``name,us_per_call,derived`` CSV; ``--json OUT`` additionally writes
+``{name: {"us": float, "derived": str}}`` so BENCH_*.json trajectory points
+are machine-generated instead of scraped from the CSV. Set
+REPRO_BENCH_FULL=1 for the paper-scale corpus (600 matrices)."""
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -24,10 +29,24 @@ MODULES = [
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on module names")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
+                    help="also write results as JSON to this path")
+    args = ap.parse_args()
+    if args.json_out:
+        # Fail fast on an unwritable path without truncating an existing
+        # trajectory file (the real write is tmp+rename after the run).
+        try:
+            with open(args.json_out, "a"):
+                pass
+        except OSError as e:
+            ap.error(f"--json: {e}")
+    results = {}
     print("name,us_per_call,derived")
     for name, mod in MODULES:
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         t0 = time.time()
         try:
@@ -38,7 +57,15 @@ def main() -> None:
             continue
         for r_name, us, derived in rows:
             print(f"{r_name},{us:.1f},{derived}")
-        print(f"{name}/elapsed,{(time.time()-t0)*1e6:.0f},-")
+            results[r_name] = {"us": float(us), "derived": derived}
+        elapsed_us = (time.time() - t0) * 1e6
+        print(f"{name}/elapsed,{elapsed_us:.0f},-")
+        results[f"{name}/elapsed"] = {"us": float(elapsed_us), "derived": "-"}
+    if args.json_out:
+        tmp = args.json_out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        os.replace(tmp, args.json_out)
 
 
 if __name__ == "__main__":

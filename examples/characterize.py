@@ -42,9 +42,11 @@ def main() -> None:
     for plat in PLATFORMS.values():
         tuner = ScheduleTuner("spmv", plat).fit(mats, max_mats=16)
         sched, info = tuner.select(A)
+        layout = (f"sell C={sched.slice_height}" if sched.layout == "sell"
+                  else f"ell q={sched.ell_quantile}")
         print(f"  {plat.name:9s} -> backend={sched.backend} "
-              f"block={sched.block_size} ell_q={sched.ell_quantile} "
-              f"t={info.get('verified_time_s', 0):.3e}s")
+              f"block={sched.block_size} layout={layout} "
+              f"rhs={sched.n_rhs} t={info.get('verified_time_s', 0):.3e}s")
 
 
 if __name__ == "__main__":

@@ -49,8 +49,10 @@ def main() -> None:
     tuner = ScheduleTuner("spmv", TPU_V5E).fit(mats, max_mats=24)
     B = gen_exponential(2048, seed=7)
     sched, info = tuner.select(B)
+    layout = (f"sell C={sched.slice_height}" if sched.layout == "sell"
+              else f"ell q={sched.ell_quantile}")
     print(f"  new matrix (scale-free): backend={sched.backend} "
-          f"block={sched.block_size} ell_q={sched.ell_quantile} "
+          f"block={sched.block_size} layout={layout} rhs={sched.n_rhs} "
           f"(tree={info['tree_time_s']:.2e}s, "
           f"verified={info['verified_time_s']:.2e}s)")
 

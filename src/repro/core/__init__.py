@@ -1,7 +1,7 @@
 """SpChar core: the paper's contribution as a composable library.
 
 Public API:
-  CSR / BSR / ELLBSR              sparse containers (csr.py)
+  CSR / BSR / ELLBSR / SELLBSR    sparse containers (csr.py)
   characterize / branch_entropy / reuse_affinity / index_affinity /
   thread_imbalance                static input metrics (metrics.py, Eq. 1-6)
   GENERATORS / TABLE2             synthetic matrices (synthetic.py, Table 2)
@@ -13,29 +13,34 @@ Public API:
   characterize_slice / compare_platforms   the characterization loop (charloop.py)
   ScheduleTuner                   loop-driven autotuning (autotune.py)
 """
-from .csr import CSR, BSR, ELLBSR
+from .csr import CSR, BSR, ELLBSR, SELLBSR
 from .metrics import (branch_entropy, reuse_affinity, index_affinity,
                       thread_imbalance, partition_imbalance, characterize,
-                      THREAD_SWEEP, FEATURE_NAMES)
+                      sell_slice_widths, sell_padding_fraction,
+                      slice_imbalance, THREAD_SWEEP, FEATURE_NAMES)
 from .synthetic import GENERATORS, TABLE2
 from .dataset import corpus, DOMAINS
 from .decision_tree import DecisionTreeRegressor, kfold_cv, mape, r2_score
 from .platforms import Platform, PLATFORMS, TPU_V4, TPU_V5E, TPU_V5P, ROOFLINE_PLATFORM
-from .counters import spmv_counters, spgemm_counters, spadd_counters
-from .perfmodel import (run_spmv_model, run_spgemm_model, run_spadd_model,
-                        execution_time, targets, stall_breakdown)
+from .counters import (spmv_counters, sell_spmv_counters, spgemm_counters,
+                       spadd_counters)
+from .perfmodel import (run_spmv_model, run_spmv_sell_model, run_spgemm_model,
+                        run_spadd_model, execution_time, targets,
+                        stall_breakdown)
 from .charloop import (build_slice, characterize_slice, characterize_all,
                        compare_platforms, grouped_importance, CharacterizationResult)
 from .autotune import ScheduleTuner, Schedule, select_moe_block_size
 
 __all__ = [
-    "CSR", "BSR", "ELLBSR", "branch_entropy", "reuse_affinity", "index_affinity",
+    "CSR", "BSR", "ELLBSR", "SELLBSR", "branch_entropy", "reuse_affinity", "index_affinity",
     "thread_imbalance", "partition_imbalance", "characterize", "THREAD_SWEEP",
     "FEATURE_NAMES", "GENERATORS", "TABLE2", "corpus", "DOMAINS",
     "DecisionTreeRegressor", "kfold_cv", "mape", "r2_score", "Platform",
     "PLATFORMS", "TPU_V4", "TPU_V5E", "TPU_V5P", "ROOFLINE_PLATFORM",
-    "spmv_counters", "spgemm_counters", "spadd_counters", "run_spmv_model",
-    "run_spgemm_model", "run_spadd_model", "execution_time", "targets",
+    "sell_slice_widths", "sell_padding_fraction", "slice_imbalance",
+    "spmv_counters", "sell_spmv_counters", "spgemm_counters", "spadd_counters",
+    "run_spmv_model", "run_spmv_sell_model", "run_spgemm_model",
+    "run_spadd_model", "execution_time", "targets",
     "stall_breakdown", "build_slice", "characterize_slice", "characterize_all",
     "compare_platforms", "grouped_importance", "CharacterizationResult",
     "ScheduleTuner", "Schedule", "select_moe_block_size",

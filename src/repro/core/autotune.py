@@ -22,12 +22,18 @@ from .csr import CSR
 from . import metrics as metrics_mod
 from .decision_tree import DecisionTreeRegressor
 from .dataset import Matrix
-from .perfmodel import run_spmv_model, run_spgemm_model, run_spadd_model
+from .perfmodel import (run_spadd_model, run_spgemm_model, run_spmv_model,
+                        run_spmv_sell_model)
 from .platforms import Platform
 
 BLOCK_SIZES = (32, 64, 128, 256)
 ELL_QUANTILES = (0.8, 0.95, 1.0)
+SLICE_HEIGHTS = (4, 8, 16)      # SELL slice heights swept as a schedule axis
+SELL_SIGMA = 64                 # sorting window (block-rows); fixed, not swept
 DENSE_DENSITY_THRESHOLD = 0.25  # above this, a dense matmul wins trivially
+# Names of the schedule-parameter features appended to the static metrics.
+CFG_FEATURES = ("cfg_block_size", "cfg_ell_quantile", "cfg_slice_height",
+                "cfg_n_rhs")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,19 +41,32 @@ class Schedule:
     backend: str          # "dense" | "bsr"
     block_size: int
     ell_quantile: float
+    layout: str = "ell"   # "ell" (global padding) | "sell" (sliced)
+    slice_height: int = 0  # SELL C; 0 = n/a for the global-ELL layout
+    n_rhs: int = 1        # RHS tile width (1 = SpMV, >1 = the SpMM path)
 
     def as_features(self) -> List[float]:
-        return [float(self.block_size), float(self.ell_quantile)]
+        return [float(self.block_size), float(self.ell_quantile),
+                float(self.slice_height), float(self.n_rhs)]
 
 
-def candidate_schedules() -> List[Schedule]:
-    return [Schedule("bsr", bs, q)
-            for bs, q in itertools.product(BLOCK_SIZES, ELL_QUANTILES)]
+def candidate_schedules(n_rhs: int = 1) -> List[Schedule]:
+    ell = [Schedule("bsr", bs, q, n_rhs=n_rhs)
+           for bs, q in itertools.product(BLOCK_SIZES, ELL_QUANTILES)]
+    sell = [Schedule("bsr", bs, 1.0, layout="sell", slice_height=c, n_rhs=n_rhs)
+            for bs, c in itertools.product(BLOCK_SIZES, SLICE_HEIGHTS)]
+    return ell + sell
 
 
 def _modeled_time(kernel: str, A: CSR, platform: Platform, sched: Schedule) -> float:
     if kernel == "spmv":
-        _, t, _ = run_spmv_model(A, platform, sched.block_size, sched.ell_quantile)
+        if sched.layout == "sell":
+            _, t, _ = run_spmv_sell_model(A, platform, sched.block_size,
+                                          sched.slice_height, SELL_SIGMA,
+                                          sched.n_rhs)
+        else:
+            _, t, _ = run_spmv_model(A, platform, sched.block_size,
+                                     sched.ell_quantile, sched.n_rhs)
     elif kernel == "spgemm":
         _, t, _ = run_spgemm_model(A, A, platform, sched.block_size)
     else:
@@ -59,9 +78,10 @@ def _modeled_time(kernel: str, A: CSR, platform: Platform, sched: Schedule) -> f
 class ScheduleTuner:
     """Tree-backed cost model over (matrix metrics, schedule params)."""
 
-    def __init__(self, kernel: str, platform: Platform) -> None:
+    def __init__(self, kernel: str, platform: Platform, n_rhs: int = 1) -> None:
         self.kernel = kernel
         self.platform = platform
+        self.n_rhs = max(int(n_rhs), 1)  # workload RHS width (SpMM path)
         self.tree: Optional[DecisionTreeRegressor] = None
         self.feature_names: List[str] = []
 
@@ -75,9 +95,9 @@ class ScheduleTuner:
             _, _, A = mats[int(i)]
             static = metrics_mod.characterize(A)
             if feature_names is None:
-                feature_names = list(static) + ["cfg_block_size", "cfg_ell_quantile"]
+                feature_names = list(static) + list(CFG_FEATURES)
             base = [static[k] for k in list(static)]
-            for sched in candidate_schedules():
+            for sched in candidate_schedules(self.n_rhs):
                 rows.append(base + sched.as_features())
                 ys.append(np.log10(max(_modeled_time(self.kernel, A, self.platform,
                                                      sched), 1e-12)))
@@ -88,16 +108,18 @@ class ScheduleTuner:
 
     def predict_time(self, static: Dict[str, float], sched: Schedule) -> float:
         assert self.tree is not None, "call fit() first"
-        x = [static[k] for k in self.feature_names[:-2]] + sched.as_features()
+        n_static = len(self.feature_names) - len(CFG_FEATURES)
+        x = [static[k] for k in self.feature_names[:n_static]] + sched.as_features()
         return float(10 ** self.tree.predict(np.asarray([x]))[0])
 
     def select(self, A: CSR, verify_top: int = 2) -> Tuple[Schedule, Dict[str, float]]:
         """Pick the best schedule for ``A``; verify top candidates by simulation."""
         if A.density() > DENSE_DENSITY_THRESHOLD:
-            return Schedule("dense", 128, 1.0), {"reason": 1.0}
+            return Schedule("dense", 128, 1.0, n_rhs=self.n_rhs), {"reason": 1.0}
         static = metrics_mod.characterize(A)
         scored = sorted(
-            ((self.predict_time(static, s), s) for s in candidate_schedules()),
+            ((self.predict_time(static, s), s)
+             for s in candidate_schedules(self.n_rhs)),
             key=lambda p: p[0])
         best_t, best_s = scored[0]
         # verification pass on the top candidates (tree is approximate)

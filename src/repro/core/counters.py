@@ -25,7 +25,7 @@ from typing import Dict
 
 import numpy as np
 
-from .csr import CSR, BSR, ELLBSR
+from .csr import CSR, BSR, ELLBSR, SELLBSR
 from .metrics import partition_imbalance
 from .platforms import Platform
 
@@ -79,9 +79,11 @@ def _vmem_budget_segments(platform: Platform, segment_bytes: int,
 
 def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
                   ell_quantile: float = 1.0,
-                  vmem_scale: float | None = None) -> Dict[str, float]:
+                  vmem_scale: float | None = None,
+                  n_rhs: int = 1) -> Dict[str, float]:
     if vmem_scale is None:
         vmem_scale = vmem_scale_for(csr.n_rows)
+    n_rhs = max(int(n_rhs), 1)
     bsr = BSR.from_csr(csr, block_size)
     bpr = bsr.blocks_per_row()
     if ell_quantile < 1.0 and bpr.size:
@@ -91,13 +93,14 @@ def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
     ell = ELLBSR.from_bsr(bsr, cap)
     bs = block_size
     executed_blocks = ell.block_indices.size
-    useful_flops = 2.0 * csr.nnz
-    executed_flops = 2.0 * executed_blocks * bs * bs
+    useful_flops = 2.0 * csr.nnz * n_rhs
+    executed_flops = 2.0 * executed_blocks * bs * bs * n_rhs
     dropped_nnz = max(csr.nnz - int(np.count_nonzero(
         ell.blocks[ell.block_indices[ell.block_indices < bsr.n_blocks]])), 0)
 
-    # x-segment residency: one segment per block column, LRU over VMEM.
-    seg_bytes = bs * BYTES_F32
+    # x-segment residency: one (bs, n_rhs) segment per block column, LRU
+    # over VMEM.
+    seg_bytes = bs * n_rhs * BYTES_F32
     lru = _LRU(_vmem_budget_segments(platform, seg_bytes, vmem_scale))
     for br in range(bsr.n_block_rows):
         for k in range(bsr.block_ptrs[br], bsr.block_ptrs[br + 1]):
@@ -105,7 +108,7 @@ def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
 
     a_bytes = executed_blocks * bs * bs * BYTES_F32
     x_bytes = lru.misses * seg_bytes
-    y_bytes = bsr.n_block_rows * bs * BYTES_F32
+    y_bytes = bsr.n_block_rows * bs * n_rhs * BYTES_F32
     return {
         "executed_blocks": float(executed_blocks),
         "useful_flops": useful_flops,
@@ -118,7 +121,73 @@ def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
         "gather_bytes": float(x_bytes),
         "grid_imbalance": partition_imbalance(bpr, 16),
         "dropped_nnz_fraction": dropped_nnz / max(csr.nnz, 1),
+        "ell_padding_fraction": ell.ell_padding_fraction(),
     }
+
+
+# ---------------------------------------------------------------------------
+# SELL SpMV/SpMM: the sliced schedule (kernels/bsr_spmv SELL path)
+# ---------------------------------------------------------------------------
+
+def sell_spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
+                       slice_height: int = 8, sigma: int = 64, n_rhs: int = 1,
+                       vmem_scale: float | None = None) -> Dict[str, float]:
+    """Counters for the SELL-C-sigma bucketed schedule, optionally with a
+    multi-RHS tile of ``n_rhs`` columns (the SpMM path).
+
+    vs ``spmv_counters``: executed work is the true cell count (padding only
+    up to each slice's own max), and every A/x/y byte is amortized over the
+    RHS width — one A-block DMA feeds ``n_rhs`` columns of output.
+    """
+    if vmem_scale is None:
+        vmem_scale = vmem_scale_for(csr.n_rows)
+    n_rhs = max(int(n_rhs), 1)
+    bsr = BSR.from_csr(csr, block_size)
+    sell = SELLBSR.from_bsr(bsr, slice_height, sigma)
+    bs = block_size
+    n_cells = sell.n_cells
+    useful_flops = 2.0 * csr.nnz * n_rhs
+    executed_flops = 2.0 * n_cells * bs * bs * n_rhs
+
+    # x-segment residency: one (bs, n_rhs) segment per block column, accessed
+    # in cell (= sorted slice) order.
+    seg_bytes = bs * n_rhs * BYTES_F32
+    lru = _LRU(_vmem_budget_segments(platform, seg_bytes, vmem_scale))
+    zero_idx = sell.blocks.shape[0] - 1
+    for bc in sell.cell_col[sell.cell_block != zero_idx]:
+        lru.access(int(bc))
+
+    a_bytes = n_cells * bs * bs * BYTES_F32
+    x_bytes = lru.misses * seg_bytes
+    y_bytes = bsr.n_block_rows * bs * n_rhs * BYTES_F32
+    per_row_cells = np.bincount(sell.cell_row,
+                                minlength=max(bsr.n_block_rows, 1))
+    return {
+        "executed_blocks": float(n_cells),
+        "useful_flops": useful_flops,
+        "executed_flops": executed_flops,
+        "padding_fraction": 1.0 - useful_flops / max(executed_flops, 1.0),
+        "vmem_hits": float(lru.hits),
+        "vmem_misses": float(lru.misses),
+        "vmem_miss_rate": lru.misses / max(lru.hits + lru.misses, 1),
+        "hbm_bytes": float(a_bytes + x_bytes + y_bytes),
+        "gather_bytes": float(x_bytes),
+        "grid_imbalance": partition_imbalance(per_row_cells, 16),
+        "sell_padding_fraction": sell.sell_padding_fraction(),
+        "ell_padding_fraction": _global_ell_padding(bsr),
+        "slice_imbalance": sell.slice_imbalance(),
+        "n_rhs": float(n_rhs),
+    }
+
+
+def _global_ell_padding(bsr: BSR) -> float:
+    """Slot waste of the global-ELL schedule on the same matrix — the
+    before-point the SELL counters are compared against."""
+    bpr = bsr.blocks_per_row()
+    if bpr.size == 0:
+        return 0.0
+    slots = bpr.size * max(int(bpr.max()), 1)
+    return 1.0 - float(bpr.sum()) / max(slots, 1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,18 @@
-"""Sparse matrix containers: CSR (paper interchange format), BSR and ELL-BSR.
+"""Sparse matrix containers: CSR (paper interchange format), BSR, ELL-BSR
+and SELL-BSR.
 
 CSR is the paper's format (Fig. 1): ``row_ptrs`` / ``col_idxs`` / ``nnz_vals``.
 BSR/ELL-BSR are the TPU-native blocked layouts our Pallas kernels consume
 (DESIGN.md §2): TPU has no efficient scalar gather, so the MXU-aligned block
 schedule *is* the paper's §4.4 "ELL / 2D-blocked format" recommendation.
+SELL-BSR (DESIGN.md §2.3) is the sliced refinement: block-rows are sorted by
+work inside windows of ``sigma`` and padded per slice of ``slice_height``
+rows instead of globally, so one power-law row no longer pads everyone.
 
 Containers are plain numpy on the host (construction/characterization side)
-with ``jax_arrays()`` exporters for device-side kernels.
+with ``jax_arrays()`` exporters for device-side kernels. All ``from_*``
+constructors are vectorized — no per-row Python loops — because host prep is
+on the serving path (bench_kernels_micro reports it as its own row).
 """
 from __future__ import annotations
 
@@ -166,11 +172,10 @@ class BSR:
         bs = self.block_size
         n_br = self.n_block_rows
         n_bc = -(-self.shape[1] // bs)
-        out = np.zeros((n_br * bs, n_bc * bs), dtype=np.float32)
-        for br in range(n_br):
-            for k in range(self.block_ptrs[br], self.block_ptrs[br + 1]):
-                bc = int(self.block_cols[k])
-                out[br * bs : (br + 1) * bs, bc * bs : (bc + 1) * bs] += self.blocks[k]
+        grid = np.zeros((n_br, n_bc, bs, bs), dtype=np.float32)
+        brows = np.repeat(np.arange(n_br), self.blocks_per_row())
+        np.add.at(grid, (brows, self.block_cols.astype(np.int64)), self.blocks)
+        out = grid.transpose(0, 2, 1, 3).reshape(n_br * bs, n_bc * bs)
         return out[: self.shape[0], : self.shape[1]]
 
 
@@ -207,13 +212,17 @@ class ELLBSR:
         mb = max(mb, 1)
         n_br = bsr.n_block_rows
         zero_idx = bsr.n_blocks
-        block_indices = np.full((n_br, mb), zero_idx, dtype=np.int32)
-        block_cols = np.zeros((n_br, mb), dtype=np.int32)
-        for br in range(n_br):
-            lo, hi = int(bsr.block_ptrs[br]), int(bsr.block_ptrs[br + 1])
-            take = min(hi - lo, mb)
-            block_indices[br, :take] = np.arange(lo, lo + take, dtype=np.int32)
-            block_cols[br, :take] = bsr.block_cols[lo : lo + take]
+        # Slot grid: position of slot j in row br is block_ptrs[br] + j while
+        # j < blocks_per_row; out-of-range slots point at the zero block.
+        slot = np.arange(mb, dtype=np.int64)[None, :]
+        valid = slot < np.minimum(bpr, mb)[:, None]
+        pos = bsr.block_ptrs[:-1][:, None] + slot
+        block_indices = np.where(valid, pos, zero_idx).astype(np.int32)
+        if bsr.n_blocks:
+            safe = np.minimum(pos, bsr.n_blocks - 1)
+            block_cols = np.where(valid, bsr.block_cols[safe], 0).astype(np.int32)
+        else:
+            block_cols = np.zeros((n_br, mb), dtype=np.int32)
         blocks = np.concatenate(
             [bsr.blocks, np.zeros((1, bsr.block_size, bsr.block_size), np.float32)], axis=0
         )
@@ -225,3 +234,123 @@ class ELLBSR:
             bsr.block_size,
             np.minimum(bpr, mb).astype(np.int32),
         )
+
+
+def sell_layout(work_per_row: np.ndarray, slice_height: int, sigma: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """The SELL-C-sigma schedule math, shared by ``SELLBSR.from_bsr`` and
+    the static metric forms (metrics.sell_slice_widths etc.).
+
+    Returns ``(row_perm, slice_widths)``: the window-sorted permutation
+    (descending work, stable inside windows of ``sigma``; sorted position ->
+    original row) and each slice's padded width (per-slice max, min 1 so
+    every row stays scheduled).
+    """
+    work = np.asarray(work_per_row, dtype=np.int64)
+    n = work.size
+    C = max(int(slice_height), 1)
+    sg = max(int(sigma), 1)
+    # Padded tail rows (key -1) sort last inside the final window and drop.
+    n_pad = -(-max(n, 1) // sg) * sg
+    keys = np.full(n_pad, -1, dtype=np.int64)
+    keys[:n] = work
+    order = np.argsort(-keys.reshape(-1, sg), axis=1, kind="stable")
+    perm = (order + np.arange(0, n_pad, sg)[:, None]).reshape(-1)
+    row_perm = perm[perm < n].astype(np.int32)
+    n_slices = -(-max(n, 1) // C)
+    padded = np.zeros(n_slices * C, dtype=np.int64)
+    padded[:n] = work[row_perm]
+    slice_widths = np.maximum(padded.reshape(n_slices, C).max(axis=1), 1)
+    return row_perm, slice_widths
+
+
+@dataclasses.dataclass
+class SELLBSR:
+    """Sliced-ELL BSR (SELL-C-sigma at block-row granularity, DESIGN.md §2.3).
+
+    Block-rows are sorted by blocks-per-row (descending, stable) inside
+    windows of ``sigma`` rows, grouped into slices of ``slice_height`` rows,
+    and each slice is padded only to its *own* widest row — a single
+    power-law row pads its slice, not the whole matrix. The schedule is
+    flattened to one cell per (block-row, slot) pair so the Pallas grid runs
+    exactly ``n_cells`` steps: ``cell_block[t]`` / ``cell_col[t]`` select the
+    A tile and x segment for grid step ``t`` and ``cell_row[t]`` is the
+    *sorted* output block-row (nondecreasing, so the output tile stays
+    resident across a row's cells). The op scatters results back through
+    ``row_perm``.
+
+    Empty slices keep width 1 (all-zero cells) so every output block-row is
+    visited and initialized by the kernel.
+    """
+
+    cell_block: np.ndarray  # (n_cells,) int32 — index into blocks; pads -> zero block
+    cell_col: np.ndarray    # (n_cells,) int32 — block-column per cell
+    cell_row: np.ndarray    # (n_cells,) int32 — sorted output block-row, nondecreasing
+    row_perm: np.ndarray    # (n_block_rows,) int32 — sorted position -> original row
+    slice_widths: np.ndarray  # (n_slices,) int32 — per-slice padded width
+    blocks: np.ndarray      # (n_blocks + 1, bs, bs); last block is zeros
+    shape: Tuple[int, int]
+    block_size: int
+    slice_height: int
+    sigma: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return int(self.row_perm.shape[0])
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.cell_block.shape[0])
+
+    @property
+    def n_slices(self) -> int:
+        return int(self.slice_widths.shape[0])
+
+    def sell_padding_fraction(self) -> float:
+        """Fraction of schedule cells that are padding (the SELL analogue of
+        ``ELLBSR.ell_padding_fraction``; same slot-waste semantics)."""
+        zero_idx = self.blocks.shape[0] - 1
+        valid = int(np.count_nonzero(self.cell_block != zero_idx))
+        return 1.0 - valid / max(self.n_cells, 1)
+
+    def slice_imbalance(self) -> float:
+        """Mean relative deviation of per-slice padded width (Eq. 5 applied
+        at slice granularity): 0 = every slice does identical work."""
+        w = self.slice_widths.astype(np.float64)
+        mean = w.mean() if w.size else 0.0
+        if mean <= 0:
+            return 0.0
+        return float(np.mean(np.abs(w - mean)) / mean)
+
+    @classmethod
+    def from_bsr(cls, bsr: BSR, slice_height: int = 8, sigma: int = 64) -> "SELLBSR":
+        C = max(int(slice_height), 1)
+        sg = max(int(sigma), 1)
+        n_br = bsr.n_block_rows
+        bs = bsr.block_size
+        bpr = bsr.blocks_per_row()
+        row_perm, slice_widths = sell_layout(bpr, C, sg)
+
+        # Flat cell schedule: sorted row p owns width(slice(p)) consecutive
+        # cells; slot j beyond the row's real blocks points at the zero block.
+        cells_per_row = np.repeat(slice_widths, C)[:n_br]
+        starts = np.concatenate([[0], np.cumsum(cells_per_row)])
+        n_cells = int(starts[-1])
+        cell_row = np.repeat(np.arange(n_br, dtype=np.int64), cells_per_row)
+        slot = np.arange(n_cells, dtype=np.int64) - np.repeat(starts[:-1],
+                                                              cells_per_row)
+        orig = row_perm[cell_row].astype(np.int64)
+        valid = slot < bpr[orig]
+        pos = bsr.block_ptrs[orig] + slot
+        zero_idx = bsr.n_blocks
+        cell_block = np.where(valid, pos, zero_idx).astype(np.int32)
+        if bsr.n_blocks:
+            cell_col = np.where(
+                valid, bsr.block_cols[np.minimum(pos, bsr.n_blocks - 1)], 0
+            ).astype(np.int32)
+        else:
+            cell_col = np.zeros(n_cells, dtype=np.int32)
+        blocks = np.concatenate(
+            [bsr.blocks, np.zeros((1, bs, bs), np.float32)], axis=0)
+        return cls(cell_block, cell_col, cell_row.astype(np.int32), row_perm,
+                   slice_widths.astype(np.int32), blocks, bsr.shape, bs, C, sg)

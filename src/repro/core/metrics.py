@@ -11,7 +11,7 @@ from typing import Dict, Iterable, Sequence
 
 import numpy as np
 
-from .csr import CSR
+from .csr import CSR, sell_layout
 
 # Paper §3.4: thread imbalance is evaluated for this T sweep.
 THREAD_SWEEP = (2, 4, 16, 32, 48, 64, 128)
@@ -146,6 +146,52 @@ def partition_imbalance(item_weights: np.ndarray, n_parts: int) -> float:
 
 def imbalance_sweep(csr: CSR, threads: Sequence[int] = THREAD_SWEEP) -> Dict[int, float]:
     return {t: thread_imbalance(csr, t) for t in threads}
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-sigma layout math (DESIGN.md §2.3) — static, distribution-only forms
+# of the counters counters.py reports for the sliced schedule. They operate
+# on any per-row work vector (blocks-per-row for the kernels, tokens-per-
+# expert for MoE) so the padding cost of slicing is predictable without
+# building the container.
+# ---------------------------------------------------------------------------
+
+def sell_slice_widths(work_per_row: np.ndarray, slice_height: int,
+                      sigma: int) -> np.ndarray:
+    """Per-slice padded width after window-sorting rows by work.
+
+    Rows are sorted descending inside windows of ``sigma``, grouped into
+    slices of ``slice_height``; each slice pads to its own max (min 1, the
+    SELLBSR invariant that keeps every output row scheduled). Delegates to
+    ``csr.sell_layout`` — the same math the container is built from.
+    """
+    _, widths = sell_layout(work_per_row, slice_height, sigma)
+    return widths
+
+
+def sell_padding_fraction(work_per_row: np.ndarray, slice_height: int,
+                          sigma: int) -> float:
+    """Fraction of SELL schedule cells that are padding: the sliced
+    counterpart of ``ELLBSR.ell_padding_fraction`` (global padding)."""
+    work = np.asarray(work_per_row, dtype=np.int64)
+    if work.size == 0:
+        return 0.0
+    C = max(int(slice_height), 1)
+    widths = sell_slice_widths(work, C, sigma)
+    cells = int(np.repeat(widths, C)[: work.size].sum())
+    return 1.0 - float(work.sum()) / max(cells, 1)
+
+
+def slice_imbalance(work_per_row: np.ndarray, slice_height: int,
+                    sigma: int) -> float:
+    """Eq. (5) applied at slice granularity: mean relative deviation of
+    per-slice padded width. 0 = slices perfectly even (uniform rows or
+    sigma large enough to sort the skew away); grows with unsorted skew."""
+    widths = sell_slice_widths(work_per_row, slice_height, sigma).astype(np.float64)
+    mean = widths.mean() if widths.size else 0.0
+    if mean <= 0:
+        return 0.0
+    return float(np.mean(np.abs(widths - mean)) / mean)
 
 
 def characterize(csr: CSR, threads: Sequence[int] = THREAD_SWEEP) -> Dict[str, float]:

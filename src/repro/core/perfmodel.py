@@ -27,7 +27,8 @@ from typing import Dict, Tuple
 import numpy as np
 
 from .csr import CSR
-from .counters import spmv_counters, spgemm_counters, spadd_counters
+from .counters import (sell_spmv_counters, spadd_counters, spgemm_counters,
+                       spmv_counters)
 from .platforms import Platform
 
 GRID_STEP_OVERHEAD_S = 1.5e-6   # per-grid-cell issue overhead (model param)
@@ -41,12 +42,14 @@ def _mxu_efficiency(block_size: int, mxu_dim: int) -> float:
 
 
 def execution_time(counters: Dict[str, float], platform: Platform,
-                   block_size: int = 128, matvec: bool = False) -> Dict[str, float]:
+                   block_size: int = 128, matvec: bool = False,
+                   n_rhs: int = 1) -> Dict[str, float]:
     peak = platform.peak_flops_bf16 * F32_PEAK_FRACTION * _mxu_efficiency(
         block_size, platform.mxu_dim)
     if matvec:
-        # SpMV tiles are (bs x bs) @ (bs,) -> rank-1 MXU occupancy penalty.
-        peak = peak / 8.0
+        # SpMV tiles are (bs x bs) @ (bs, n_rhs) -> narrow-RHS MXU occupancy
+        # penalty; a multi-RHS tile (SpMM) amortizes it away by n_rhs=8.
+        peak = peak / (8.0 / min(max(int(n_rhs), 1), 8))
     t_compute = counters["executed_flops"] / max(peak, 1.0)
     t_memory = counters["hbm_bytes"] / platform.hbm_bw
     t_latency = (counters["vmem_misses"] * platform.hbm_latency_s
@@ -99,9 +102,20 @@ def stall_breakdown(times: Dict[str, float]) -> Dict[str, float]:
 # ---------------------------------------------------------------------------
 
 def run_spmv_model(csr: CSR, platform: Platform, block_size: int = 128,
-                   ell_quantile: float = 1.0) -> Tuple[Dict, Dict, Dict]:
-    c = spmv_counters(csr, platform, block_size, ell_quantile)
-    t = execution_time(c, platform, block_size, matvec=True)
+                   ell_quantile: float = 1.0, n_rhs: int = 1
+                   ) -> Tuple[Dict, Dict, Dict]:
+    c = spmv_counters(csr, platform, block_size, ell_quantile, n_rhs=n_rhs)
+    t = execution_time(c, platform, block_size, matvec=True, n_rhs=n_rhs)
+    return c, t, targets(c, t)
+
+
+def run_spmv_sell_model(csr: CSR, platform: Platform, block_size: int = 128,
+                        slice_height: int = 8, sigma: int = 64,
+                        n_rhs: int = 1) -> Tuple[Dict, Dict, Dict]:
+    """SELL-C-sigma bucketed SpMV, or SpMM when ``n_rhs > 1``."""
+    c = sell_spmv_counters(csr, platform, block_size, slice_height, sigma,
+                           n_rhs)
+    t = execution_time(c, platform, block_size, matvec=True, n_rhs=n_rhs)
     return c, t, targets(c, t)
 
 

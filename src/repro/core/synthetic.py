@@ -170,6 +170,31 @@ def _norm_ppf(q: np.ndarray) -> np.ndarray:
     return out
 
 
+def gen_zipf(n: int, seed: int = 0, a: float = 1.09, core_frac: float = 0.44,
+             **_) -> CSR:
+    """Zipf/power-law row lengths (degree-sorted adjacency, e.g. a web graph
+    reordered by descending degree with compacted neighbor IDs).
+
+    Row ``i`` (descending rank) follows a saturated Zipf law
+    ``L_i = min(n, c * (i + 1) ** (-1 / (a - 1)))`` with the scale ``c``
+    chosen so a ``core_frac`` fraction of rows saturates at full width (the
+    dense hub core) before the Pareto tail (exponent ``1/(a-1)``) takes
+    over; columns are the compacted prefix ``0..L_i-1``. This is the
+    category that breaks global ELL: the hub core sets ``max_blocks`` for
+    every block-row while the tail block-rows hold ~1 block each, which is
+    exactly the padding SELL-C-sigma slicing removes (DESIGN.md §2.3). The
+    profile is scale-free: the same relative core/tail shape at any ``n``.
+
+    Not part of ``GENERATORS``/Table 2 — the paper's nine categories stay
+    as-is; this is the stress input for the sliced layout.
+    """
+    s = 1.0 / max(a - 1.0, 1e-6)
+    rank = np.arange(n, dtype=np.float64) + 1.0
+    lengths = n * (max(core_frac * n, 1.0) / rank) ** s
+    lengths = np.clip(lengths, 1, n).astype(np.int64)
+    return _from_row_lengths(lengths, n, lambda i, ln, r: np.arange(ln), seed)
+
+
 GENERATORS: Dict[str, Callable[..., CSR]] = {
     "row": gen_row,
     "column": gen_column,

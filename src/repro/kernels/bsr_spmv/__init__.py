@@ -1,2 +1,4 @@
-from .ops import bsr_spmv, ell_device_arrays  # noqa: F401
-from .ref import ref_bsr_spmv  # noqa: F401
+from .ops import (bsr_spmm, bsr_spmv, ell_device_arrays, prepare,  # noqa: F401
+                  prepare_sell, sell_device_arrays)
+from .ref import (ref_bsr_spmm, ref_bsr_spmm_sell, ref_bsr_spmv,  # noqa: F401
+                  ref_bsr_spmv_sell)

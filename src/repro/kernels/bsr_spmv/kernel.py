@@ -1,21 +1,39 @@
-"""ELL-BSR SpMV Pallas TPU kernel (paper Alg. 1 adapted per §4.4 / DESIGN §2).
+"""ELL/SELL-BSR SpMV + multi-RHS SpMM Pallas TPU kernels (paper Alg. 1
+adapted per §4.4 / DESIGN §2).
 
-Schedule
-  grid = (n_block_rows, max_blocks_per_row); the slot axis is innermost so
-  the output block-row stays resident in VMEM across accumulation steps.
-  Scalar-prefetched ``block_indices`` / ``block_cols`` drive the BlockSpec
-  index maps: the A tile for grid cell (i, j) is ``blocks[idx[i, j]]`` and
-  the x segment is ``x[cols[i, j]]`` — data-dependent HBM->VMEM DMA with no
-  data-dependent control flow in the kernel body. Padding slots point at a
-  trailing all-zeros block (ELLBSR invariant), so irregular rows cost dead
-  MXU lanes (the counters' ``padding_fraction``) instead of branches: the
-  paper's branch-misprediction bottleneck transformed into a measurable,
-  tree-visible quantity.
+Schedules
+  ELL (global padding, DESIGN §2.2)
+    grid = (n_block_rows, max_blocks_per_row); the slot axis is innermost so
+    the output block-row stays resident in VMEM across accumulation steps.
+    Scalar-prefetched ``block_indices`` / ``block_cols`` drive the BlockSpec
+    index maps: the A tile for grid cell (i, j) is ``blocks[idx[i, j]]`` and
+    the x segment is ``x[cols[i, j]]`` — data-dependent HBM->VMEM DMA with no
+    data-dependent control flow in the kernel body. Padding slots point at a
+    trailing all-zeros block (ELLBSR invariant), so irregular rows cost dead
+    MXU lanes (the counters' ``padding_fraction``) instead of branches: the
+    paper's branch-misprediction bottleneck transformed into a measurable,
+    tree-visible quantity.
 
-VMEM per grid cell: (1+1 double-buffered) x (bs*bs + bs + bs) * 4B; at
-bs=128 that is ~132 KB, far under VMEM, leaving room for deeper pipelining.
-MXU alignment wants bs in {128, 256}; smaller bs trades padding for
-underutilized systolic lanes (autotune.py arbitrates via the tree model).
+  SELL (sliced padding, DESIGN §2.3)
+    grid = (n_cells,) — a ragged schedule flattened on the host. Three
+    scalar-prefetched streams drive the index maps: ``cell_block[t]`` /
+    ``cell_col[t]`` pick the A tile and x segment of step t, and
+    ``cell_row[t]`` (nondecreasing: the host emits a row's cells
+    consecutively in SELL row-sorted order) picks the resident output tile,
+    which Pallas flushes exactly when the row index advances. The kernel
+    writes in sorted order; the op scatters back through ``row_perm``. The
+    grid runs sum_s C*w_s steps instead of n_block_rows*max_w — the padding
+    eliminated by slicing is grid steps that simply never launch.
+
+  SpMM (multi-RHS)
+    Same two schedules with x blocked as (n_block_cols, bs, k): one A-tile
+    DMA now feeds a (bs, bs) @ (bs, k) MXU op, amortizing A traffic across k
+    right-hand sides — the reuse the paper finds missing from SpMV.
+
+VMEM per grid cell: (1+1 double-buffered) x (bs*bs + bs*k + bs*k) * 4B; at
+bs=128, k=8 that is ~148 KB, far under VMEM, leaving room for deeper
+pipelining. MXU alignment wants bs in {128, 256}; smaller bs trades padding
+for underutilized systolic lanes (autotune.py arbitrates via the tree model).
 """
 from __future__ import annotations
 
@@ -27,7 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _spmv_kernel(idx_ref, cols_ref, blk_ref, x_ref, y_ref):
+def _ell_kernel(idx_ref, cols_ref, blk_ref, x_ref, y_ref):
     del idx_ref, cols_ref  # consumed by the index maps
     j = pl.program_id(1)
 
@@ -35,7 +53,22 @@ def _spmv_kernel(idx_ref, cols_ref, blk_ref, x_ref, y_ref):
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    # (bs, bs) @ (bs,) accumulated into the resident output block-row.
+    # (bs, bs) @ (bs,) or (bs, bs) @ (bs, k), accumulated into the resident
+    # output block-row.
+    y_ref[...] += jnp.dot(
+        blk_ref[0], x_ref[0], preferred_element_type=jnp.float32
+    )[None]
+
+
+def _sell_kernel(idx_ref, cols_ref, rows_ref, blk_ref, x_ref, y_ref):
+    del idx_ref, cols_ref  # consumed by the index maps
+    t = pl.program_id(0)
+    first = jnp.logical_or(t == 0, rows_ref[t] != rows_ref[jnp.maximum(t - 1, 0)])
+
+    @pl.when(first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
     y_ref[...] += jnp.dot(
         blk_ref[0], x_ref[0], preferred_element_type=jnp.float32
     )[None]
@@ -68,8 +101,109 @@ def bsr_spmv_pallas(block_indices: jax.Array, block_cols: jax.Array,
         out_specs=pl.BlockSpec((1, bs), lambda i, j, idx, cols: (i, 0)),
     )
     return pl.pallas_call(
-        _spmv_kernel,
+        _ell_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_br, bs), jnp.float32),
         interpret=interpret,
     )(block_indices, block_cols, blocks, x_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spmm_pallas(block_indices: jax.Array, block_cols: jax.Array,
+                    blocks: jax.Array, x_blocks: jax.Array,
+                    interpret: bool = False) -> jax.Array:
+    """Y = A @ X with A in ELL-BSR layout and X multi-RHS.
+
+    Args:
+      x_blocks: (n_block_cols, bs, k) float32 — dense RHS, row-blocked; k is
+        the lane-aligned RHS tile the A-block DMA is amortized over.
+    Returns:
+      (n_br, bs, k) float32 — blocked result rows.
+    """
+    n_br, mb = block_indices.shape
+    bs = blocks.shape[-1]
+    k = x_blocks.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_br, mb),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, j, idx, cols: (idx[i, j], 0, 0)),
+            pl.BlockSpec((1, bs, k), lambda i, j, idx, cols: (cols[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, k), lambda i, j, idx, cols: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _ell_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_br, bs, k), jnp.float32),
+        interpret=interpret,
+    )(block_indices, block_cols, blocks, x_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
+def bsr_spmv_sell_pallas(cell_block: jax.Array, cell_col: jax.Array,
+                         cell_row: jax.Array, blocks: jax.Array,
+                         x_blocks: jax.Array, n_block_rows: int,
+                         interpret: bool = False) -> jax.Array:
+    """y_sorted = P A @ x with A in SELL-BSR layout (bucketed schedule).
+
+    Args:
+      cell_block: (n_cells,) int32 — A tile per grid step; pads hold the
+        all-zeros block index.
+      cell_col:   (n_cells,) int32 — x segment per grid step.
+      cell_row:   (n_cells,) int32 — *sorted* output block-row per step,
+        nondecreasing so the output tile is revisited only consecutively.
+      blocks:     (n_blocks + 1, bs, bs) float32, last block all-zeros.
+      x_blocks:   (n_block_cols, bs) float32.
+      n_block_rows: static output row count.
+    Returns:
+      (n_block_rows, bs) float32 in SELL-sorted row order; scatter back with
+      ``SELLBSR.row_perm``.
+    """
+    n_cells = cell_block.shape[0]
+    bs = blocks.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_cells,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda t, idx, cols, rows: (idx[t], 0, 0)),
+            pl.BlockSpec((1, bs), lambda t, idx, cols, rows: (cols[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda t, idx, cols, rows: (rows[t], 0)),
+    )
+    return pl.pallas_call(
+        _sell_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, bs), jnp.float32),
+        interpret=interpret,
+    )(cell_block, cell_col, cell_row, blocks, x_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
+def bsr_spmm_sell_pallas(cell_block: jax.Array, cell_col: jax.Array,
+                         cell_row: jax.Array, blocks: jax.Array,
+                         x_blocks: jax.Array, n_block_rows: int,
+                         interpret: bool = False) -> jax.Array:
+    """Y_sorted = P A @ X: the SELL bucketed schedule with a multi-RHS tile.
+
+    Same contract as ``bsr_spmv_sell_pallas`` with x_blocks of shape
+    (n_block_cols, bs, k); returns (n_block_rows, bs, k) in sorted order.
+    """
+    n_cells = cell_block.shape[0]
+    bs = blocks.shape[-1]
+    k = x_blocks.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_cells,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda t, idx, cols, rows: (idx[t], 0, 0)),
+            pl.BlockSpec((1, bs, k), lambda t, idx, cols, rows: (cols[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, k), lambda t, idx, cols, rows: (rows[t], 0, 0)),
+    )
+    return pl.pallas_call(
+        _sell_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, bs, k), jnp.float32),
+        interpret=interpret,
+    )(cell_block, cell_col, cell_row, blocks, x_blocks)

@@ -1,16 +1,28 @@
-"""Public SpMV op: host-side format prep + backend dispatch."""
+"""Public SpMV/SpMM ops: host-side format prep + layout/backend dispatch.
+
+Two layouts (DESIGN.md §2.2-2.3):
+  ELLBSR  — globally padded, regular (n_br, max_blocks) grid.
+  SELLBSR — sliced padding; ragged schedule flattened to one grid step per
+            cell, results scattered back through the stored row permutation.
+Both expose ``jnp`` / ``interpret`` / ``pallas`` backends; ``bsr_spmv`` and
+``bsr_spmm`` dispatch on the container type.
+"""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.csr import CSR, BSR, ELLBSR
+from ...core.csr import CSR, BSR, ELLBSR, SELLBSR
 from ..common import resolve_backend
-from .kernel import bsr_spmv_pallas
-from .ref import ref_bsr_spmv
+from .kernel import (bsr_spmm_pallas, bsr_spmm_sell_pallas, bsr_spmv_pallas,
+                     bsr_spmv_sell_pallas)
+from .ref import (ref_bsr_spmm, ref_bsr_spmm_sell, ref_bsr_spmv,
+                  ref_bsr_spmv_sell)
+
+SparseLayout = Union[ELLBSR, SELLBSR]
 
 
 def ell_device_arrays(ell: ELLBSR) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
@@ -21,30 +33,116 @@ def ell_device_arrays(ell: ELLBSR) -> Tuple[jax.Array, jax.Array, jax.Array, int
             ell.block_size)
 
 
+def sell_device_arrays(sell: SELLBSR
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Move a SELLBSR container's cell schedule to device arrays."""
+    return (jnp.asarray(sell.cell_block, jnp.int32),
+            jnp.asarray(sell.cell_col, jnp.int32),
+            jnp.asarray(sell.cell_row, jnp.int32),
+            jnp.asarray(sell.blocks, jnp.float32))
+
+
 def prepare(csr: CSR, block_size: int = 128, max_blocks: int | None = None) -> ELLBSR:
     return ELLBSR.from_bsr(BSR.from_csr(csr, block_size), max_blocks)
 
 
-def bsr_spmv(ell: ELLBSR, x: jax.Array, backend: str = "auto") -> jax.Array:
-    """y = A @ x for A in ELL-BSR form; x is the dense (n_cols,) vector.
+def prepare_sell(csr: CSR, block_size: int = 128, slice_height: int = 8,
+                 sigma: int = 64) -> SELLBSR:
+    return SELLBSR.from_bsr(BSR.from_csr(csr, block_size), slice_height, sigma)
+
+
+def _x_blocked(a: SparseLayout, x: jax.Array) -> jax.Array:
+    """Pad the dense vector to the block grid and reshape to (n_bc, bs)."""
+    bs = a.block_size
+    n_bc = -(-a.shape[1] // bs)
+    x_pad = jnp.zeros((n_bc * bs,), jnp.float32).at[: a.shape[1]].set(
+        x.astype(jnp.float32))
+    return x_pad.reshape(n_bc, bs)
+
+
+def _rhs_blocked(a: SparseLayout, X: jax.Array, rhs_tile: int) -> jax.Array:
+    """Pad the dense RHS to the block grid / RHS tile: (n_bc, bs, k_pad)."""
+    bs = a.block_size
+    n_bc = -(-a.shape[1] // bs)
+    k = X.shape[1]
+    k_pad = -(-k // rhs_tile) * rhs_tile
+    X_pad = jnp.zeros((n_bc * bs, k_pad), jnp.float32)
+    X_pad = X_pad.at[: a.shape[1], :k].set(X.astype(jnp.float32))
+    return X_pad.reshape(n_bc, bs, k_pad)
+
+
+def _scatter_rows(sell: SELLBSR, y_sorted: jax.Array) -> jax.Array:
+    """Undo the SELL row sort: sorted position i holds original block-row
+    ``row_perm[i]``."""
+    perm = jnp.asarray(sell.row_perm, jnp.int32)
+    return jnp.zeros_like(y_sorted).at[perm].set(y_sorted)
+
+
+def bsr_spmv(a: SparseLayout, x: jax.Array, backend: str = "auto") -> jax.Array:
+    """y = A @ x for A in ELL-BSR or SELL-BSR form; x is the dense
+    (n_cols,) vector.
 
     Returns a dense (n_rows,) vector (unpadded).
     """
     backend = resolve_backend(backend)
-    bs = ell.block_size
-    n_bc = -(-ell.shape[1] // bs)
-    x_pad = jnp.zeros((n_bc * bs,), jnp.float32).at[: ell.shape[1]].set(
-        x.astype(jnp.float32))
-    x_blocks = x_pad.reshape(n_bc, bs)
-    idx, cols, blocks, _ = ell_device_arrays(ell)
-    if backend == "jnp":
-        y = ref_bsr_spmv(idx, cols, blocks, x_blocks)
+    x_blocks = _x_blocked(a, x)
+    if isinstance(a, SELLBSR):
+        idx, cols, rows, blocks = sell_device_arrays(a)
+        n_br = a.n_block_rows
+        if backend == "jnp":
+            y = ref_bsr_spmv_sell(idx, cols, rows, blocks, x_blocks, n_br)
+        else:
+            y = bsr_spmv_sell_pallas(idx, cols, rows, blocks, x_blocks, n_br,
+                                     interpret=(backend == "interpret"))
+        y = _scatter_rows(a, y)
     else:
-        y = bsr_spmv_pallas(idx, cols, blocks, x_blocks,
-                            interpret=(backend == "interpret"))
-    return y.reshape(-1)[: ell.shape[0]]
+        idx, cols, blocks, _ = ell_device_arrays(a)
+        if backend == "jnp":
+            y = ref_bsr_spmv(idx, cols, blocks, x_blocks)
+        else:
+            y = bsr_spmv_pallas(idx, cols, blocks, x_blocks,
+                                interpret=(backend == "interpret"))
+    return y.reshape(-1)[: a.shape[0]]
+
+
+def bsr_spmm(a: SparseLayout, X: jax.Array, backend: str = "auto",
+             rhs_tile: int | None = None) -> jax.Array:
+    """Y = A @ X for A in ELL-BSR or SELL-BSR form; X is dense (n_cols, k).
+
+    The k axis is padded up to ``rhs_tile`` (lane-aligned: 128 for the
+    compiled Pallas path, 8 otherwise) so one A-block DMA feeds a
+    (bs, bs) @ (bs, k) MXU op — A traffic amortized across the RHS width.
+    Returns dense (n_rows, k) (unpadded).
+    """
+    backend = resolve_backend(backend)
+    if rhs_tile is None:
+        rhs_tile = 128 if backend == "pallas" else 8
+    k = X.shape[1]
+    x_blocks = _rhs_blocked(a, X, rhs_tile)
+    if isinstance(a, SELLBSR):
+        idx, cols, rows, blocks = sell_device_arrays(a)
+        n_br = a.n_block_rows
+        if backend == "jnp":
+            y = ref_bsr_spmm_sell(idx, cols, rows, blocks, x_blocks, n_br)
+        else:
+            y = bsr_spmm_sell_pallas(idx, cols, rows, blocks, x_blocks, n_br,
+                                     interpret=(backend == "interpret"))
+        y = _scatter_rows(a, y)
+    else:
+        idx, cols, blocks, _ = ell_device_arrays(a)
+        if backend == "jnp":
+            y = ref_bsr_spmm(idx, cols, blocks, x_blocks)
+        else:
+            y = bsr_spmm_pallas(idx, cols, blocks, x_blocks,
+                                interpret=(backend == "interpret"))
+    return y.reshape(y.shape[0] * y.shape[1], -1)[: a.shape[0], :k]
 
 
 def spmv_oracle(csr: CSR, x: np.ndarray) -> np.ndarray:
     """CSR-semantics oracle (paper Alg. 1), dense math."""
     return csr.to_dense() @ np.asarray(x, np.float32)
+
+
+def spmm_oracle(csr: CSR, X: np.ndarray) -> np.ndarray:
+    """CSR-semantics multi-RHS oracle, dense math."""
+    return csr.to_dense() @ np.asarray(X, np.float32)

@@ -1,5 +1,8 @@
-"""Pure-jnp oracle for the ELL-BSR SpMV kernel (same inputs, same output)."""
+"""Pure-jnp oracles for the ELL/SELL-BSR SpMV and SpMM kernels (same
+inputs, same outputs)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -12,3 +15,31 @@ def ref_bsr_spmv(block_indices: jax.Array, block_cols: jax.Array,
     a = blocks[block_indices]          # (n_br, mb, bs, bs)
     xs = x_blocks[block_cols]          # (n_br, mb, bs)
     return jnp.einsum("rmab,rmb->ra", a, xs)
+
+
+@jax.jit
+def ref_bsr_spmm(block_indices: jax.Array, block_cols: jax.Array,
+                 blocks: jax.Array, x_blocks: jax.Array) -> jax.Array:
+    """Y[i] = sum_j blocks[idx[i, j]] @ x_blocks[cols[i, j]] (multi-RHS)."""
+    a = blocks[block_indices]          # (n_br, mb, bs, bs)
+    xs = x_blocks[block_cols]          # (n_br, mb, bs, k)
+    return jnp.einsum("rmab,rmbk->rak", a, xs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows",))
+def ref_bsr_spmv_sell(cell_block: jax.Array, cell_col: jax.Array,
+                      cell_row: jax.Array, blocks: jax.Array,
+                      x_blocks: jax.Array, n_block_rows: int) -> jax.Array:
+    """y_sorted[r] = sum over cells t with cell_row[t] == r of
+    blocks[cell_block[t]] @ x_blocks[cell_col[t]]."""
+    prods = jnp.einsum("tab,tb->ta", blocks[cell_block], x_blocks[cell_col])
+    return jax.ops.segment_sum(prods, cell_row, num_segments=n_block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows",))
+def ref_bsr_spmm_sell(cell_block: jax.Array, cell_col: jax.Array,
+                      cell_row: jax.Array, blocks: jax.Array,
+                      x_blocks: jax.Array, n_block_rows: int) -> jax.Array:
+    """Multi-RHS form of ``ref_bsr_spmv_sell``: x_blocks is (n_bc, bs, k)."""
+    prods = jnp.einsum("tab,tbk->tak", blocks[cell_block], x_blocks[cell_col])
+    return jax.ops.segment_sum(prods, cell_row, num_segments=n_block_rows)

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) for system invariants."""
+"""Property-based tests (hypothesis) for system invariants.
+
+Skipped cleanly when hypothesis isn't installed (it's a dev-only
+dependency, see requirements-dev.txt).
+"""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import (CSR, BSR, ELLBSR, branch_entropy, index_affinity,
                         partition_imbalance, reuse_affinity)
