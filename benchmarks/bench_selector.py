@@ -1,0 +1,72 @@
+"""Online selection service vs the full-sweep autotuner (DESIGN.md §7).
+
+Rows report the serving economics the selector exists for: per-request
+selection overhead through fingerprint+cache+tree, the full verify-sweep
+cost it replaces, cache hit rate, verify-fallback fraction, and how many
+kernel buckets (= compiled programs) a batch of requests collapses into.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import ScheduleTuner, TPU_V5E, corpus
+from repro.core.autotune import _modeled_time, candidate_schedules
+from repro.selector import ScheduleCache, SelectorService, fingerprint
+from .common import FULL, Row, time_call
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    n_train, n_held = (27, 18) if FULL else (12, 9)
+    n_max = 1024 if FULL else 512
+    train = corpus(n_matrices=n_train, n_min=256, n_max=n_max, seed=3)
+    held = corpus(n_matrices=n_held, n_min=256, n_max=n_max, seed=91,
+                  include_synthetic=False)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=n_train)
+
+    # Request stream with repeat traffic: every held-out matrix twice.
+    def serve_all() -> SelectorService:
+        svc = SelectorService(tuner, cache=ScheduleCache(), batch_max=8)
+        for rep in range(2):
+            for name, _, A in held:
+                svc.submit(f"{rep}:{name}", A)
+        svc.run()
+        return svc
+
+    us_all = time_call(serve_all, repeats=3)
+    svc = serve_all()
+    tel = svc.telemetry()
+    n_req = tel["requests"]
+    us_req = us_all / max(n_req, 1)
+
+    # The before-point: the full simulation sweep select() per matrix.
+    _, _, A0 = held[0]
+    us_sweep = time_call(
+        lambda: min(_modeled_time("spmv", A0, TPU_V5E, s)
+                    for s in candidate_schedules()), repeats=3)
+    us_fp = time_call(lambda: fingerprint(A0), repeats=3)
+
+    # Selection quality vs the sweep argmin on the held-out slice.
+    within = 0
+    for name, _, A in held:
+        svc.submit(f"q:{name}", A)
+    for (name, _, A), d in zip(held, svc.run()):
+        t_sel = _modeled_time("spmv", A, TPU_V5E, d.schedule)
+        t_best = min(_modeled_time("spmv", A, TPU_V5E, s)
+                     for s in candidate_schedules())
+        within += t_sel <= 1.1 * t_best
+
+    rows.append(("selector/request", us_req,
+                 f"n_req={n_req:.0f};hit_rate={tel['cache_hit_rate']:.2f};"
+                 f"fallback={tel['fallback_fraction']:.2f};"
+                 f"buckets={tel['buckets']:.0f};"
+                 f"batches={tel['batches']:.0f};"
+                 f"within10={within / len(held):.2f}"))
+    rows.append(("selector/fingerprint", us_fp,
+                 f"n={A0.shape[0]};nnz={A0.nnz}"))
+    rows.append(("selector/full_sweep_select", us_sweep,
+                 f"n_candidates={len(candidate_schedules())};"
+                 f"speedup_vs_request={us_sweep / max(us_req, 1e-9):.1f}x"))
+    return rows

@@ -13,7 +13,7 @@ import traceback
 from . import (bench_synthetic_categories, bench_thread_imbalance,
                bench_tree_mape, bench_stall_proxies, bench_importances,
                bench_perf_by_category, bench_kernel_hillclimb,
-               bench_kernels_micro, bench_roofline)
+               bench_kernels_micro, bench_roofline, bench_selector)
 
 MODULES = [
     ("table2_fig3", bench_synthetic_categories),
@@ -25,16 +25,17 @@ MODULES = [
     ("hillclimb_2.63x", bench_kernel_hillclimb),
     ("kernels_micro", bench_kernels_micro),
     ("roofline", bench_roofline),
+    ("selector", bench_selector),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     help="substring filter on module names")
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="also write results as JSON to this path")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.json_out:
         # Fail fast on an unwritable path without truncating an existing
         # trajectory file (the real write is tmp+rename after the run).

@@ -3,6 +3,9 @@
 designers map architectural features to inputs/algorithms).
 
 Run:  PYTHONPATH=src python examples/characterize.py [--category uniform]
+      PYTHONPATH=src python examples/characterize.py --serve 16
+(the --serve mode routes requests through the online selection service
+instead of re-running the tuner per matrix; see repro/selector/.)
 """
 import argparse
 
@@ -11,15 +14,40 @@ from repro.core import (GENERATORS, PLATFORMS, ScheduleTuner, characterize,
                         run_spmv_model, stall_breakdown)
 
 
+def serve_mode(n_requests: int, platform_name: str = "tpu_v5e") -> None:
+    """Serve ``n_requests`` schedule requests through the selector service
+    (thin wrapper over the real serving driver, repro.selector.serve)."""
+    from repro.selector.serve import main as serve_main
+
+    serve_main(["--requests", str(n_requests), "--platform", platform_name])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--category", default="exponential",
-                    choices=sorted(GENERATORS))
-    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--category", default=None, choices=sorted(GENERATORS),
+                    help="matrix family (default: exponential)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="matrix size (default: 2048)")
+    ap.add_argument("--platform", default=None, choices=sorted(PLATFORMS),
+                    help="serving platform for --serve (default: tpu_v5e)")
+    ap.add_argument("--serve", type=int, default=0, metavar="N",
+                    help="serve N requests through the online selector "
+                         "service instead of one-off characterization")
     args = ap.parse_args()
 
-    A = GENERATORS[args.category](args.n, seed=0)
-    print(f"matrix: {args.category} n={args.n} nnz={A.nnz}")
+    if args.serve:
+        if args.category is not None or args.n is not None:
+            ap.error("--serve draws requests from the held-out corpus; "
+                     "--category/--n do not apply")
+        serve_mode(args.serve, args.platform or "tpu_v5e")
+        return
+    if args.platform is not None:
+        ap.error("--platform only applies to --serve; the characterization "
+                 "report covers every platform")
+
+    category, n = args.category or "exponential", args.n or 2048
+    A = GENERATORS[category](n, seed=0)
+    print(f"matrix: {category} n={n} nnz={A.nnz}")
     print("\nstatic metrics (paper Eq. 1-6):")
     for k, v in characterize(A).items():
         print(f"  {k:22s} {v:10.4f}")

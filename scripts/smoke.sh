@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Smoke gate: tier-1 tests + a 10-request selector serve + bench JSON shape.
+# Usage: scripts/smoke.sh [--fast]   (--fast skips the full tier-1 suite and
+# runs the selector/counter/schema slice only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+  python -m pytest -x -q tests/test_selector.py tests/test_counters_lru.py \
+    tests/test_bench_schema.py
+else
+  python -m pytest -x -q
+fi
+
+# 10-request selector smoke run (held-out corpus, cache persisted + reloaded)
+tmpdir="$(mktemp -d)"
+trap 'rm -rf "$tmpdir"' EXIT
+python -m repro.selector.serve --requests 10 --train-mats 9 --serve-mats 5 \
+  --n-min 256 --n-max 384 --batch 4 --cache-path "$tmpdir/cache.json"
+test -s "$tmpdir/cache.json"
+
+# benchmark JSON trajectory emission stays machine-readable
+python -m benchmarks.run selector --json "$tmpdir/bench.json"
+python - "$tmpdir/bench.json" <<'PY'
+import json, sys
+data = json.load(open(sys.argv[1]))
+assert data and all(set(r) == {"us", "derived"} for r in data.values()), data
+print(f"smoke OK: {len(data)} bench rows")
+PY

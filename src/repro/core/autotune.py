@@ -84,23 +84,49 @@ class ScheduleTuner:
         self.n_rhs = max(int(n_rhs), 1)  # workload RHS width (SpMM path)
         self.tree: Optional[DecisionTreeRegressor] = None
         self.feature_names: List[str] = []
+        self.fit_simulations_ = 0
 
-    def fit(self, mats: Sequence[Matrix], max_mats: int = 64, seed: int = 0
+    def fit(self, mats: Sequence[Matrix], max_mats: int = 64, seed: int = 0,
+            prune_top_k: Optional[int] = None, bootstrap_mats: int = 8
             ) -> "ScheduleTuner":
+        """Train the cost tree on (static metrics, schedule params) rows.
+
+        With ``prune_top_k`` set, the candidate sweep is itself pruned by the
+        tree (ROADMAP item): the first ``bootstrap_mats`` matrices sweep every
+        candidate and train a provisional tree; each later matrix only
+        simulates the provisional tree's top-``k`` candidates, so fit() cost
+        stops scaling with the full layout x block_size x quantile x
+        slice_height product. ``fit_simulations_`` records the number of
+        schedule simulations actually run.
+        """
         rng = np.random.default_rng(seed)
         idx = rng.permutation(len(mats))[:max_mats]
+        candidates = candidate_schedules(self.n_rhs)
         rows, ys = [], []
         feature_names: Optional[List[str]] = None
-        for i in idx:
+        provisional: Optional[DecisionTreeRegressor] = None
+        self.fit_simulations_ = 0
+        for count, i in enumerate(idx):
             _, _, A = mats[int(i)]
             static = metrics_mod.characterize(A)
             if feature_names is None:
                 feature_names = list(static) + list(CFG_FEATURES)
-            base = [static[k] for k in list(static)]
-            for sched in candidate_schedules(self.n_rhs):
+            base = [static[k] for k in feature_names[: -len(CFG_FEATURES)]]
+            scheds = candidates
+            if provisional is not None:
+                k = max(int(prune_top_k), 1)
+                scored = provisional.predict(np.asarray(
+                    [base + s.as_features() for s in candidates]))
+                scheds = [candidates[j] for j in np.argsort(scored)[:k]]
+            for sched in scheds:
                 rows.append(base + sched.as_features())
                 ys.append(np.log10(max(_modeled_time(self.kernel, A, self.platform,
                                                      sched), 1e-12)))
+                self.fit_simulations_ += 1
+            if (prune_top_k is not None and provisional is None
+                    and count + 1 >= min(bootstrap_mats, len(idx))):
+                provisional = DecisionTreeRegressor(max_depth=14).fit(
+                    np.asarray(rows), np.asarray(ys))
         self.feature_names = feature_names or []
         self.tree = DecisionTreeRegressor(max_depth=14).fit(
             np.asarray(rows), np.asarray(ys))

@@ -25,15 +25,20 @@ from typing import Dict
 
 import numpy as np
 
-from .csr import CSR, BSR, ELLBSR, SELLBSR
-from .metrics import partition_imbalance
+from .csr import CSR, BSR, ELLBSR, SELLBSR, ell_block_cap
+from .metrics import count_dominated_before, partition_imbalance, prev_occurrence
 from .platforms import Platform
 
 BYTES_F32 = 4
 
 
 class _LRU:
-    """LRU residency model for VMEM-cached operand segments."""
+    """LRU residency model for VMEM-cached operand segments.
+
+    Per-access reference implementation. The counters below run the
+    vectorized ``lru_hit_mask`` instead (identical results, no Python loop
+    over accesses); tests assert the two stay equivalent.
+    """
 
     def __init__(self, capacity_segments: int) -> None:
         self.cap = max(int(capacity_segments), 1)
@@ -51,6 +56,40 @@ class _LRU:
         if len(self.store) > self.cap:
             self.store.popitem(last=False)
         return False
+
+
+def lru_hit_mask(stream: np.ndarray, capacity: int) -> np.ndarray:
+    """Exact per-access LRU hit/miss mask, vectorized.
+
+    An access hits a capacity-``capacity`` LRU iff its stack distance — the
+    number of distinct keys accessed since the previous access to the same
+    key — is < capacity. With prev[i] the previous same-key position, every
+    j <= prev[i] trivially satisfies prev[j] <= prev[i] (prev[j] < j), so
+
+        d(i) = #{j < i : prev[j] <= prev[i]} - (prev[i] + 1)
+
+    counts exactly the first-in-window accesses in (prev[i], i), i.e. the
+    distinct keys of the window. Two exact shortcuts keep the common cases
+    O(n log n) sort-bound: if the stream has <= capacity distinct keys every
+    reuse hits, and any window shorter than ``capacity`` accesses cannot
+    contain ``capacity`` distinct keys, so only long-window reuses need the
+    full dominance count.
+    """
+    stream = np.asarray(stream)
+    n = stream.size
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    cap = max(int(capacity), 1)
+    prev = prev_occurrence(stream)
+    reused = prev >= 0
+    if int(n - reused.sum()) <= cap:  # #first-accesses == #distinct keys
+        return reused
+    hits = reused & ((np.arange(n) - prev - 1) < cap)
+    hard = np.nonzero(reused & ~hits)[0]
+    if hard.size:
+        d = count_dominated_before(prev, hard) - (prev[hard] + 1)
+        hits[hard] = d < cap
+    return hits
 
 
 # The paper pins synthetic matrices at 16M rows so the SpMV dense vector
@@ -86,11 +125,7 @@ def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
     n_rhs = max(int(n_rhs), 1)
     bsr = BSR.from_csr(csr, block_size)
     bpr = bsr.blocks_per_row()
-    if ell_quantile < 1.0 and bpr.size:
-        cap = max(int(np.quantile(bpr, ell_quantile)), 1)
-    else:
-        cap = int(bpr.max()) if bpr.size else 1
-    ell = ELLBSR.from_bsr(bsr, cap)
+    ell = ELLBSR.from_bsr(bsr, ell_block_cap(bpr, ell_quantile))
     bs = block_size
     executed_blocks = ell.block_indices.size
     useful_flops = 2.0 * csr.nnz * n_rhs
@@ -101,22 +136,21 @@ def spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
     # x-segment residency: one (bs, n_rhs) segment per block column, LRU
     # over VMEM.
     seg_bytes = bs * n_rhs * BYTES_F32
-    lru = _LRU(_vmem_budget_segments(platform, seg_bytes, vmem_scale))
-    for br in range(bsr.n_block_rows):
-        for k in range(bsr.block_ptrs[br], bsr.block_ptrs[br + 1]):
-            lru.access(int(bsr.block_cols[k]))
+    hit = lru_hit_mask(bsr.block_cols,
+                       _vmem_budget_segments(platform, seg_bytes, vmem_scale))
+    lru_hits, lru_misses = int(hit.sum()), int(hit.size - hit.sum())
 
     a_bytes = executed_blocks * bs * bs * BYTES_F32
-    x_bytes = lru.misses * seg_bytes
+    x_bytes = lru_misses * seg_bytes
     y_bytes = bsr.n_block_rows * bs * n_rhs * BYTES_F32
     return {
         "executed_blocks": float(executed_blocks),
         "useful_flops": useful_flops,
         "executed_flops": executed_flops,
         "padding_fraction": 1.0 - useful_flops / max(executed_flops, 1.0),
-        "vmem_hits": float(lru.hits),
-        "vmem_misses": float(lru.misses),
-        "vmem_miss_rate": lru.misses / max(lru.hits + lru.misses, 1),
+        "vmem_hits": float(lru_hits),
+        "vmem_misses": float(lru_misses),
+        "vmem_miss_rate": lru_misses / max(lru_hits + lru_misses, 1),
         "hbm_bytes": float(a_bytes + x_bytes + y_bytes),
         "gather_bytes": float(x_bytes),
         "grid_imbalance": partition_imbalance(bpr, 16),
@@ -152,13 +186,13 @@ def sell_spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
     # x-segment residency: one (bs, n_rhs) segment per block column, accessed
     # in cell (= sorted slice) order.
     seg_bytes = bs * n_rhs * BYTES_F32
-    lru = _LRU(_vmem_budget_segments(platform, seg_bytes, vmem_scale))
     zero_idx = sell.blocks.shape[0] - 1
-    for bc in sell.cell_col[sell.cell_block != zero_idx]:
-        lru.access(int(bc))
+    hit = lru_hit_mask(sell.cell_col[sell.cell_block != zero_idx],
+                       _vmem_budget_segments(platform, seg_bytes, vmem_scale))
+    lru_hits, lru_misses = int(hit.sum()), int(hit.size - hit.sum())
 
     a_bytes = n_cells * bs * bs * BYTES_F32
-    x_bytes = lru.misses * seg_bytes
+    x_bytes = lru_misses * seg_bytes
     y_bytes = bsr.n_block_rows * bs * n_rhs * BYTES_F32
     per_row_cells = np.bincount(sell.cell_row,
                                 minlength=max(bsr.n_block_rows, 1))
@@ -167,9 +201,9 @@ def sell_spmv_counters(csr: CSR, platform: Platform, block_size: int = 128,
         "useful_flops": useful_flops,
         "executed_flops": executed_flops,
         "padding_fraction": 1.0 - useful_flops / max(executed_flops, 1.0),
-        "vmem_hits": float(lru.hits),
-        "vmem_misses": float(lru.misses),
-        "vmem_miss_rate": lru.misses / max(lru.hits + lru.misses, 1),
+        "vmem_hits": float(lru_hits),
+        "vmem_misses": float(lru_misses),
+        "vmem_miss_rate": lru_misses / max(lru_hits + lru_misses, 1),
         "hbm_bytes": float(a_bytes + x_bytes + y_bytes),
         "gather_bytes": float(x_bytes),
         "grid_imbalance": partition_imbalance(per_row_cells, 16),
@@ -216,11 +250,10 @@ def spgemm_counters(a: CSR, b: CSR, platform: Platform, block_size: int = 128,
 
     # B block-row residency in VMEM (the paper's "poor reuse of the RHS").
     mean_row_bytes = float(b_row_bytes.mean()) if b_row_bytes.size else 1.0
-    lru = _LRU(_vmem_budget_segments(platform, int(max(mean_row_bytes, 1)), vmem_scale))
-    gather_bytes = 0.0
-    for k in safe_cols:
-        if not lru.access(int(k)):
-            gather_bytes += float(b_row_bytes[int(k)])
+    hit = lru_hit_mask(safe_cols, _vmem_budget_segments(
+        platform, int(max(mean_row_bytes, 1)), vmem_scale))
+    lru_hits, lru_misses = int(hit.sum()), int(hit.size - hit.sum())
+    gather_bytes = float(b_row_bytes[safe_cols[~hit]].sum())
 
     a_bytes = bsr_a.n_blocks * bs * bs * BYTES_F32
     # C traffic: accumulate block rows (symbolic union size).
@@ -231,9 +264,9 @@ def spgemm_counters(a: CSR, b: CSR, platform: Platform, block_size: int = 128,
         "useful_flops": useful_flops,
         "executed_flops": max(executed_flops, useful_flops),
         "padding_fraction": 1.0 - useful_flops / max(executed_flops, 1.0),
-        "vmem_hits": float(lru.hits),
-        "vmem_misses": float(lru.misses),
-        "vmem_miss_rate": lru.misses / max(lru.hits + lru.misses, 1),
+        "vmem_hits": float(lru_hits),
+        "vmem_misses": float(lru_misses),
+        "vmem_miss_rate": lru_misses / max(lru_hits + lru_misses, 1),
         "hbm_bytes": float(a_bytes + gather_bytes + c_bytes),
         "gather_bytes": gather_bytes,
         "grid_imbalance": partition_imbalance(bsr_a.blocks_per_row(), 16),

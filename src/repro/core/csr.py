@@ -236,6 +236,20 @@ class ELLBSR:
         )
 
 
+def ell_block_cap(blocks_per_row: np.ndarray, quantile: float) -> int:
+    """Quantile block-cap rule of the q<1 ELL schedule: rows beyond the
+    ``quantile`` of blocks-per-row are truncated. Shared by the counters
+    simulation (counters.spmv_counters) and the container build
+    (kernels.bsr_spmv.prepare_with_schedule) so the schedule that was
+    modeled is exactly the one served."""
+    bpr = np.asarray(blocks_per_row)
+    if bpr.size == 0:
+        return 1
+    if quantile >= 1.0:
+        return max(int(bpr.max()), 1)
+    return max(int(np.quantile(bpr, quantile)), 1)
+
+
 def sell_layout(work_per_row: np.ndarray, slice_height: int, sigma: int
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """The SELL-C-sigma schedule math, shared by ``SELLBSR.from_bsr`` and

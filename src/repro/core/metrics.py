@@ -47,13 +47,75 @@ def _lookup_stream(csr: CSR) -> np.ndarray:
     return csr.col_idxs.astype(np.int64)
 
 
+def prev_occurrence(stream: np.ndarray) -> np.ndarray:
+    """prev[i] = position of the previous access to stream[i]'s key, or -1."""
+    n = stream.size
+    order = np.argsort(stream, kind="stable")
+    s = stream[order]
+    prev = np.full(n, -1, dtype=np.int64)
+    same = s[1:] == s[:-1]
+    prev[order[1:][same]] = order[:-1][same]
+    return prev
+
+
+def count_dominated_before(prev: np.ndarray, q_idx: np.ndarray,
+                           chunk: int = 512) -> np.ndarray:
+    """For each query position i in ``q_idx`` (sorted ascending):
+    #{j < i : prev[j] <= prev[i]}, without a per-access Python loop.
+
+    This is the primitive behind both stack/reuse distances (here) and the
+    LRU residency counters (counters.py): with prev the previous-occurrence
+    array, every j <= prev[i] trivially satisfies prev[j] <= prev[i]
+    (prev[j] < j), so the count minus (prev[i] + 1) is exactly the number of
+    first-in-window accesses in (prev[i], i) — the distinct keys touched
+    since position i's key was last accessed.
+
+    Chunked two-level count: queries inside a chunk compare against that
+    chunk with one broadcasted matrix; earlier chunks are kept sorted in
+    O(log n) Bentley-Saxe merged blocks and queried with searchsorted, so
+    Python-level iterations are O(n/chunk * log(n/chunk)).
+    """
+    n = prev.size
+    out = np.zeros(q_idx.size, dtype=np.int64)
+    blocks: list = []  # sorted arrays of earlier prev values, sizes decreasing
+    for start in range(0, n, chunk):
+        end = min(start + chunk, n)
+        lo, hi = np.searchsorted(q_idx, (start, end))
+        qi = q_idx[lo:hi]
+        if qi.size:
+            qv = prev[qi]
+            for blk in blocks:
+                out[lo:hi] += np.searchsorted(blk, qv, side="right")
+            c = prev[start:end]
+            in_chunk = ((c[None, :] <= qv[:, None])
+                        & (np.arange(start, end)[None, :] < qi[:, None]))
+            out[lo:hi] += in_chunk.sum(axis=1)
+        blocks.append(np.sort(prev[start:end]))
+        while len(blocks) > 1 and blocks[-2].size <= blocks[-1].size:
+            merged = np.concatenate([blocks.pop(), blocks.pop()])
+            merged.sort()
+            blocks.append(merged)
+    return out
+
+
+def stack_distances(stream: np.ndarray) -> np.ndarray:
+    """Exact stack distance per reuse (distinct keys since the previous
+    access of the same key), for the reuse positions in stream order."""
+    prev = prev_occurrence(stream)
+    reuse_idx = np.nonzero(prev >= 0)[0]
+    if reuse_idx.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    return count_dominated_before(prev, reuse_idx) - (prev[reuse_idx] + 1)
+
+
 def mean_reuse_distance(stream: np.ndarray, max_samples: int = 200_000) -> float:
     """Mean reuse distance (#distinct addresses between reuses) of a stream.
 
-    Exact stack-distance is O(n log n) with a BIT; we use the standard
-    "distinct elements since last access" approximation via a Fenwick tree.
-    Streams longer than ``max_samples`` are uniformly subsampled as in the
-    paper's tooling (metrics must stay cheap relative to kernel runs).
+    The "distinct elements since last access" stack distance, computed
+    vectorized (no per-access Python loop — fingerprinting is on the
+    selector's serving path). Streams longer than ``max_samples`` are
+    uniformly subsampled as in the paper's tooling (metrics must stay cheap
+    relative to kernel runs).
     """
     stream = np.asarray(stream, dtype=np.int64)
     if stream.size == 0:
@@ -61,40 +123,10 @@ def mean_reuse_distance(stream: np.ndarray, max_samples: int = 200_000) -> float
     if stream.size > max_samples:
         step = stream.size // max_samples
         stream = stream[::step]
-    n = stream.size
-    # Fenwick tree over positions marking "most recent access" flags.
-    tree = np.zeros(n + 1, dtype=np.int64)
-
-    def update(i: int, delta: int) -> None:
-        i += 1
-        while i <= n:
-            tree[i] += delta
-            i += i & (-i)
-
-    def query(i: int) -> int:  # prefix sum [0, i]
-        i += 1
-        s = 0
-        while i > 0:
-            s += tree[i]
-            i -= i & (-i)
-        return int(s)
-
-    last_pos: Dict[int, int] = {}
-    total = 0.0
-    n_reuses = 0
-    for pos in range(n):
-        addr = int(stream[pos])
-        prev = last_pos.get(addr)
-        if prev is not None:
-            # distinct addresses touched strictly between prev and pos
-            total += query(pos - 1) - query(prev)
-            n_reuses += 1
-            update(prev, -1)
-        update(pos, +1)
-        last_pos[addr] = pos
-    if n_reuses == 0:
-        return float(n)  # never reused: effectively infinite; clamp to n
-    return total / n_reuses
+    d = stack_distances(stream)
+    if d.size == 0:
+        return float(stream.size)  # never reused: effectively infinite; clamp
+    return float(d.sum() / d.size)
 
 
 def mean_index_distance(stream: np.ndarray, max_samples: int = 1_000_000) -> float:

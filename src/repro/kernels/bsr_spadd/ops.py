@@ -44,9 +44,18 @@ def spadd_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
             np.asarray(ia, np.int32), np.asarray(ib, np.int32))
 
 
-def bsr_spadd(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto"
-              ) -> BSR:
-    """C = A + B via block-union schedule; returns C as BSR."""
+def bsr_spadd(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto",
+              schedule=None) -> BSR:
+    """C = A + B via block-union schedule; returns C as BSR.
+
+    ``schedule``: an optional pre-selected ``core.autotune.Schedule`` (from
+    the selector service); its block size overrides ``block_size``.
+    """
+    if schedule is not None:
+        if schedule.backend == "dense":
+            raise ValueError("dense schedules have no BSR path; dispatch a "
+                             "dense matmul instead")
+        block_size = schedule.block_size
     if a.shape != b.shape:
         raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
     backend = resolve_backend(backend)

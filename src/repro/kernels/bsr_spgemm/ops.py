@@ -48,9 +48,18 @@ def spgemm_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
     return c_ptrs, np.asarray(c_cols_all, np.int32), pair_a, pair_b
 
 
-def bsr_spgemm(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto"
-               ) -> BSR:
-    """C = A @ B via the block-pair Gustavson schedule; returns C as BSR."""
+def bsr_spgemm(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto",
+               schedule=None) -> BSR:
+    """C = A @ B via the block-pair Gustavson schedule; returns C as BSR.
+
+    ``schedule``: an optional pre-selected ``core.autotune.Schedule`` (from
+    the selector service); its block size overrides ``block_size``.
+    """
+    if schedule is not None:
+        if schedule.backend == "dense":
+            raise ValueError("dense schedules have no BSR path; dispatch a "
+                             "dense matmul instead")
+        block_size = schedule.block_size
     if a.shape[1] != b.shape[0]:
         raise ValueError(f"inner dims mismatch {a.shape} @ {b.shape}")
     backend = resolve_backend(backend)

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.csr import CSR, BSR, ELLBSR, SELLBSR
+from ...core.autotune import SELL_SIGMA, Schedule
+from ...core.csr import CSR, BSR, ELLBSR, SELLBSR, ell_block_cap
 from ..common import resolve_backend
 from .kernel import (bsr_spmm_pallas, bsr_spmm_sell_pallas, bsr_spmv_pallas,
                      bsr_spmv_sell_pallas)
@@ -49,6 +50,36 @@ def prepare(csr: CSR, block_size: int = 128, max_blocks: int | None = None) -> E
 def prepare_sell(csr: CSR, block_size: int = 128, slice_height: int = 8,
                  sigma: int = 64) -> SELLBSR:
     return SELLBSR.from_bsr(BSR.from_csr(csr, block_size), slice_height, sigma)
+
+
+def prepare_with_schedule(csr: CSR, sched: Schedule,
+                          sigma: int = SELL_SIGMA) -> SparseLayout:
+    """Build the container a pre-selected autotune/selector ``Schedule``
+    names: the glue between the selection service and the kernels."""
+    if sched.backend == "dense":
+        raise ValueError("dense schedules have no sparse container; "
+                         "dispatch to a dense matmul instead")
+    if sched.layout == "sell":
+        return prepare_sell(csr, sched.block_size,
+                            max(sched.slice_height, 1), sigma)
+    bsr = BSR.from_csr(csr, sched.block_size)
+    return ELLBSR.from_bsr(bsr, ell_block_cap(bsr.blocks_per_row(),
+                                              sched.ell_quantile))
+
+
+def bsr_spmv_scheduled(csr: CSR, x: jax.Array, sched: Schedule,
+                       backend: str = "auto") -> jax.Array:
+    """y = A @ x (or Y = A @ X when x is 2-D) under a pre-selected
+    ``Schedule``: prep + layout dispatch + backend in one call, so serving
+    code routes a (matrix, schedule) pair straight to the kernels."""
+    x = jnp.asarray(x)
+    if sched.backend == "dense":
+        dense = jnp.asarray(csr.to_dense())
+        return dense @ x.astype(jnp.float32)
+    a = prepare_with_schedule(csr, sched)
+    if x.ndim == 2:
+        return bsr_spmm(a, x, backend=backend)
+    return bsr_spmv(a, x, backend=backend)
 
 
 def _x_blocked(a: SparseLayout, x: jax.Array) -> jax.Array:

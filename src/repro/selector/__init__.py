@@ -1,0 +1,21 @@
+"""Online kernel-selection service (DESIGN.md §7).
+
+Turns the offline characterization loop into a serving subsystem:
+  fingerprint      cheap static features + stable hash per CSR (fingerprint.py)
+  SchedulePredictor  trained tree -> full Schedule + confidence (predictor.py)
+  ScheduleCache    persistent JSON LRU keyed by fingerprint (cache.py)
+  SelectorService  batched requests, schedule-bucketed kernel dispatch,
+                   low-confidence fallback to the autotune verify pass
+                   (service.py); CLI entry: ``python -m repro.selector.serve``
+"""
+from .cache import ScheduleCache, schedule_from_dict, schedule_to_dict
+from .fingerprint import FP_PRECISION, Fingerprint, fingerprint
+from .predictor import Prediction, SchedulePredictor, retraining_row
+from .service import Decision, Request, SelectorService
+
+__all__ = [
+    "FP_PRECISION", "Fingerprint", "fingerprint",
+    "Prediction", "SchedulePredictor", "retraining_row",
+    "ScheduleCache", "schedule_from_dict", "schedule_to_dict",
+    "Decision", "Request", "SelectorService",
+]

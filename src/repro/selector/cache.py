@@ -1,0 +1,132 @@
+"""Persistent fingerprint -> Schedule cache with LRU eviction.
+
+One JSON file on disk, atomic tmp+rename writes, bounded entry count. Every
+entry stores the canonical (rounded) feature vector alongside the schedule:
+a lookup whose hash matches but whose canonical vector differs is a hash
+collision and is served as a miss (and counted), so aliasing can never hand
+a matrix another matrix's schedule. Telemetry counts hits / misses /
+collisions / evictions / fallback insertions for the serving loop's
+hit-rate reporting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import OrderedDict
+from typing import Dict, Optional
+
+from ..core.autotune import Schedule
+from .fingerprint import Fingerprint
+
+CACHE_FORMAT_VERSION = 1
+
+
+def schedule_to_dict(sched: Schedule) -> Dict:
+    return dataclasses.asdict(sched)
+
+
+def schedule_from_dict(d: Dict) -> Schedule:
+    return Schedule(backend=str(d["backend"]), block_size=int(d["block_size"]),
+                    ell_quantile=float(d["ell_quantile"]),
+                    layout=str(d.get("layout", "ell")),
+                    slice_height=int(d.get("slice_height", 0)),
+                    n_rhs=int(d.get("n_rhs", 1)))
+
+
+class ScheduleCache:
+    """LRU cache of selected schedules keyed by matrix fingerprint.
+
+    ``context`` identifies the tuner configuration the schedules were
+    selected for (kernel:platform:rhs — SelectorService fills it in); a
+    persisted cache file reopened under a different configuration serves
+    misses instead of handing back wrong-kernel/wrong-platform schedules.
+    """
+
+    def __init__(self, path: Optional[str] = None, capacity: int = 256,
+                 context: str = "") -> None:
+        self.path = path
+        self.capacity = max(int(capacity), 1)
+        self.context = context
+        self._entries: "OrderedDict[str, Dict]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.collisions = 0
+        self.context_misses = 0
+        self.evictions = 0
+        if path is not None and os.path.exists(path):
+            self._load(path)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ----------------------------------------------------------------- I/O
+    def _load(self, path: str) -> None:
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != CACHE_FORMAT_VERSION:
+            return  # stale format: start empty rather than misread entries
+        for entry in payload.get("entries", []):
+            self._entries[entry["key"]] = entry
+        while len(self._entries) > self.capacity:  # honor a smaller reopen
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def flush(self) -> None:
+        """Persist entries (LRU order preserved) atomically."""
+        if self.path is None:
+            return
+        payload = {"version": CACHE_FORMAT_VERSION,
+                   "entries": list(self._entries.values())}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # -------------------------------------------------------------- lookup
+    def get(self, fp: Fingerprint) -> Optional[Schedule]:
+        entry = self._entries.get(fp.key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if entry.get("context", "") != self.context:
+            self.context_misses += 1
+            self.misses += 1
+            return None
+        if entry["canonical"] != [list(pair) for pair in fp.canonical] or \
+                entry["shape"] != list(fp.shape) or entry["nnz"] != fp.nnz:
+            self.collisions += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(fp.key)
+        self.hits += 1
+        return schedule_from_dict(entry["schedule"])
+
+    def put(self, fp: Fingerprint, sched: Schedule, source: str,
+            modeled_time_s: Optional[float] = None) -> None:
+        self._entries[fp.key] = {
+            "key": fp.key,
+            "context": self.context,
+            "canonical": [list(pair) for pair in fp.canonical],
+            "shape": list(fp.shape),
+            "nnz": fp.nnz,
+            "schedule": schedule_to_dict(sched),
+            "source": source,
+            "modeled_time_s": modeled_time_s,
+        }
+        self._entries.move_to_end(fp.key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def telemetry(self) -> Dict[str, float]:
+        lookups = self.hits + self.misses
+        return {
+            "entries": float(len(self._entries)),
+            "hits": float(self.hits),
+            "misses": float(self.misses),
+            "collisions": float(self.collisions),
+            "context_misses": float(self.context_misses),
+            "evictions": float(self.evictions),
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+        }

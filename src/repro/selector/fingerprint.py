@@ -1,0 +1,60 @@
+"""Matrix fingerprints: the cache/prediction key of the selection service.
+
+A fingerprint is the paper's static characterization vector (metrics.py
+Eq. 1-6 — no schedule simulation, no kernel run) plus the exact shape/nnz,
+canonicalized to a fixed decimal precision and hashed. Rounding before
+hashing is what makes the key deterministic: the float features come out of
+subsampled streams and log transforms whose last bits are not meaningful,
+so two byte-identical matrices must map to one key while structurally
+different matrices keep distinct keys (shape/nnz are exact, and the cache
+double-checks the full rounded vector on every hit — see cache.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Tuple
+
+from ..core import metrics as metrics_mod
+from ..core.csr import CSR
+
+# Decimal digits kept per feature when forming the hash key. All features
+# are O(1)-magnitude (affinities/entropies in [0,1], log10 sizes < ~10), so
+# absolute decimal rounding is a uniform relative precision too.
+FP_PRECISION = 6
+
+
+def _canon(value: float, precision: int) -> str:
+    """Fixed-precision canonical text for one feature (rounds and formats in
+    one step; normalizes -0.0 and non-finite values)."""
+    v = float(value)
+    if v != v:  # NaN never equals itself: pin a canonical spelling
+        return "nan"
+    if v in (float("inf"), float("-inf")):
+        return "inf" if v > 0 else "-inf"
+    text = f"{v:.{precision}f}"
+    return f"{0.0:.{precision}f}" if float(text) == 0.0 else text
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Stable identity of a matrix for schedule selection."""
+
+    key: str                                   # sha1 hex digest
+    canonical: Tuple[Tuple[str, str], ...]     # (feature, rounded text) pairs
+    features: Dict[str, float]                 # unrounded, for the predictor
+    shape: Tuple[int, int]
+    nnz: int
+
+
+def fingerprint(csr: CSR, precision: int = FP_PRECISION) -> Fingerprint:
+    """Characterize ``csr`` once and derive the stable cache key."""
+    feats = metrics_mod.characterize(csr)
+    canonical = tuple(sorted((k, _canon(v, precision)) for k, v in feats.items()))
+    payload = "|".join(
+        [f"v1;shape={csr.shape[0]}x{csr.shape[1]};nnz={csr.nnz}"]
+        + [f"{k}={t}" for k, t in canonical])
+    key = hashlib.sha1(payload.encode("utf-8")).hexdigest()
+    return Fingerprint(key=key, canonical=canonical, features=dict(feats),
+                       shape=(int(csr.shape[0]), int(csr.shape[1])),
+                       nnz=int(csr.nnz))

@@ -1,0 +1,189 @@
+"""Online schedule-selection service: the characterization loop as a server.
+
+Request path (DESIGN.md §7):
+
+    CSR --> fingerprint --> cache? --hit--> Schedule      (no tree, no sim)
+                              |miss
+                              v
+                          tree predict --confident--> Schedule  (no sim)
+                              |low confidence
+                              v
+                          simulation verify over the tree's top-k
+                          (the existing autotune pass) --> Schedule
+                              |
+                              +--> cache.put + retraining example
+
+Batching: requests drained per ``process_pending`` call are bucketed by the
+selected schedule, because the schedule *is* the Pallas compile key —
+matrices in one bucket share one compiled kernel (same layout / block size /
+slice height / RHS tile), so the bucket count, not the request count, is the
+number of kernel programs a serving tick pays for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.autotune import Schedule, ScheduleTuner, _modeled_time
+from ..core.csr import CSR
+from .cache import ScheduleCache
+from .fingerprint import Fingerprint, fingerprint
+from .predictor import Prediction, SchedulePredictor, retraining_row
+
+
+@dataclasses.dataclass
+class Request:
+    name: str
+    csr: CSR
+    x: Optional[np.ndarray] = None   # optional RHS: execute the kernel too
+
+
+@dataclasses.dataclass
+class Decision:
+    name: str
+    schedule: Schedule
+    source: str              # "cache" | "tree" | "verify"
+    confidence: float
+    fingerprint_key: str
+    modeled_time_s: Optional[float]
+    batch_id: int = -1
+    bucket: int = -1         # bucket index within the batch
+    y: Optional[np.ndarray] = None   # kernel output when the request carried x
+
+
+class SelectorService:
+    """Batched, cached, tree-predicted kernel-config selection."""
+
+    def __init__(self, tuner: ScheduleTuner, cache: Optional[ScheduleCache] = None,
+                 confidence_threshold: float = 0.02, verify_top_k: int = 0,
+                 batch_max: int = 16) -> None:
+        self.tuner = tuner
+        self.predictor = SchedulePredictor(tuner)
+        self.cache = cache if cache is not None else ScheduleCache()
+        if not self.cache.context:
+            # pin persisted entries to this tuner configuration so a reused
+            # cache file can never serve wrong-kernel/platform schedules
+            self.cache.context = (f"{tuner.kernel}:{tuner.platform.name}:"
+                                  f"rhs{tuner.n_rhs}")
+        self.confidence_threshold = float(confidence_threshold)
+        # 0 = verify the full candidate sweep (exact argmin fallback);
+        # k > 0 = verify only the tree's top-k ranked candidates.
+        self.verify_top_k = int(verify_top_k)
+        self.batch_max = max(int(batch_max), 1)
+        self.pending: "deque[Request]" = deque()
+        self.retraining_examples: List[Dict] = []
+        self._counts = {"requests": 0, "cache_hits": 0, "tree_served": 0,
+                        "verify_fallbacks": 0, "batches": 0, "buckets": 0,
+                        "executed": 0}
+        self._bucket_sizes: List[int] = []
+
+    # ------------------------------------------------------------- ingress
+    def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None) -> None:
+        self.pending.append(Request(name, csr, x))
+
+    # ------------------------------------------------------------ decisions
+    def _verify(self, fp: Fingerprint, A: CSR) -> Tuple[Schedule, float]:
+        """The autotune simulation pass, optionally pruned by the tree."""
+        candidates = [s for _, s in self.predictor.rank(fp.features)]
+        if self.verify_top_k > 0:
+            candidates = candidates[: self.verify_top_k]
+        timed = [(_modeled_time(self.tuner.kernel, A, self.tuner.platform, s), s)
+                 for s in candidates]
+        timed.sort(key=lambda p: p[0])
+        return timed[0][1], timed[0][0]
+
+    def _decide(self, req: Request, batch_id: int) -> Decision:
+        fp = fingerprint(req.csr)
+        cached = self.cache.get(fp)
+        if cached is not None:
+            self._counts["cache_hits"] += 1
+            return Decision(req.name, cached, "cache", 1.0, fp.key, None,
+                            batch_id)
+        pred: Prediction = self.predictor.predict(fp)
+        if pred.schedule.backend != "dense" and \
+                pred.confidence < self.confidence_threshold:
+            sched, t = self._verify(fp, req.csr)
+            self._counts["verify_fallbacks"] += 1
+            self.cache.put(fp, sched, "verify", t)
+            self.retraining_examples.append(retraining_row(fp, sched, t))
+            return Decision(req.name, sched, "verify", pred.confidence,
+                            fp.key, t, batch_id)
+        self._counts["tree_served"] += 1
+        self.cache.put(fp, pred.schedule, "tree", pred.tree_time_s)
+        return Decision(req.name, pred.schedule, "tree", pred.confidence,
+                        fp.key, pred.tree_time_s, batch_id)
+
+    # ------------------------------------------------------------- serving
+    def process_pending(self, backend: str = "jnp") -> List[Decision]:
+        """Drain up to ``batch_max`` requests as one serving tick: decide a
+        schedule per request, bucket same-schedule requests together, and run
+        the kernel for requests that carried an RHS (one bucket = one
+        compiled kernel program)."""
+        batch: List[Request] = []
+        while self.pending and len(batch) < self.batch_max:
+            batch.append(self.pending.popleft())
+        if not batch:
+            return []
+        batch_id = self._counts["batches"]
+        self._counts["batches"] += 1
+        decisions = [self._decide(req, batch_id) for req in batch]
+        self._counts["requests"] += len(batch)
+
+        buckets: "Dict[Schedule, List[int]]" = {}
+        for i, dec in enumerate(decisions):
+            buckets.setdefault(dec.schedule, []).append(i)
+        for b, (key, members) in enumerate(sorted(buckets.items(),
+                                                  key=lambda kv: kv[1][0])):
+            for i in members:
+                decisions[i].bucket = b
+            self._bucket_sizes.append(len(members))
+            self._execute_bucket([(batch[i], decisions[i]) for i in members],
+                                 backend)
+        self._counts["buckets"] += len(buckets)
+        return decisions
+
+    def run(self, backend: str = "jnp") -> List[Decision]:
+        """Process every pending request; returns all decisions."""
+        out: List[Decision] = []
+        while self.pending:
+            out.extend(self.process_pending(backend))
+        return out
+
+    def _execute_bucket(self, members: List[Tuple[Request, Decision]],
+                        backend: str) -> None:
+        """Run SpMV/SpMM for the bucket members that carried an RHS.
+
+        All members share one Schedule, hence one kernel program; the Pallas
+        compile cache is keyed by (schedule, padded shapes), so the bucket
+        amortizes compilation the way the paper's sweep amortized
+        characterization.
+        """
+        from ..kernels.bsr_spmv.ops import bsr_spmv_scheduled
+        for req, dec in members:
+            if req.x is None:
+                continue
+            dec.y = np.asarray(
+                bsr_spmv_scheduled(req.csr, req.x, dec.schedule,
+                                   backend=backend))
+            self._counts["executed"] += 1
+
+    # ------------------------------------------------------------ telemetry
+    def telemetry(self) -> Dict[str, float]:
+        c = dict(self._counts)
+        n = max(c["requests"], 1)
+        sizes = self._bucket_sizes or [0]
+        out = {k: float(v) for k, v in c.items()}
+        out.update({
+            "fallback_fraction": c["verify_fallbacks"] / n,
+            "cache_hit_rate": c["cache_hits"] / n,
+            "mean_bucket_size": float(np.mean(sizes)),
+            "max_bucket_size": float(np.max(sizes)),
+            "retraining_examples": float(len(self.retraining_examples)),
+        })
+        store = self.cache.telemetry()
+        for k in ("entries", "collisions", "evictions"):
+            out[f"cache_{k}"] = store[k]
+        return out

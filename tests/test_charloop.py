@@ -80,6 +80,24 @@ def test_autotuner_selects_and_verifies():
     assert info["verified_time_s"] > 0
 
 
+def test_autotuner_pruned_fit_cuts_simulations():
+    """prune_top_k sweeps all candidates only for the bootstrap matrices;
+    the rest simulate the provisional tree's top-k — far fewer simulation
+    calls, same select() interface."""
+    from repro.core.autotune import candidate_schedules
+    n_cand = len(candidate_schedules())
+    full = ScheduleTuner("spmv", TPU_V5E).fit(MATS, max_mats=10)
+    assert full.fit_simulations_ == 10 * n_cand
+    k, boot = 3, 4
+    pruned = ScheduleTuner("spmv", TPU_V5E).fit(
+        MATS, max_mats=10, prune_top_k=k, bootstrap_mats=boot)
+    assert pruned.fit_simulations_ == boot * n_cand + (10 - boot) * k
+    _, _, A = MATS[2]
+    sched, info = pruned.select(A)
+    assert isinstance(sched, Schedule)
+    assert info["verified_time_s"] > 0
+
+
 def test_moe_block_size_heuristic():
     balanced = np.full(16, 100.0)
     skewed = np.array([1500.0] + [10.0] * 15)

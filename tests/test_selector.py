@@ -1,0 +1,284 @@
+"""Online schedule-selection service (repro/selector, DESIGN.md §7):
+fingerprint determinism, cache behaviour, and the end-to-end acceptance
+bar — near-argmin schedules with a bounded simulation-fallback rate."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ScheduleTuner, TPU_V5E, corpus
+from repro.core.autotune import Schedule, _modeled_time, candidate_schedules
+from repro.core.csr import CSR
+from repro.selector import (ScheduleCache, SchedulePredictor, SelectorService,
+                            fingerprint, schedule_from_dict, schedule_to_dict)
+
+TRAIN = corpus(n_matrices=27, n_min=256, n_max=768, seed=3)
+HELD = corpus(n_matrices=18, n_min=256, n_max=768, seed=91,
+              include_synthetic=False)
+
+
+@pytest.fixture(scope="module")
+def tuner():
+    return ScheduleTuner("spmv", TPU_V5E).fit(TRAIN, max_mats=20)
+
+
+def _zipfish(n=320, seed=0, tweak=False):
+    rng = np.random.default_rng(seed)
+    deg = np.minimum((rng.pareto(1.3, n) + 1) * 4, n // 2).astype(np.int64)
+    rows = np.repeat(np.arange(n), deg)
+    cols = rng.integers(0, n, rows.size)
+    if tweak:
+        # same shape and nnz, one column index moved: near-equal, not equal
+        cols = cols.copy()
+        cols[0] = (cols[0] + n // 2) % n
+    vals = np.ones(rows.size, np.float32)
+    return CSR.from_coo(rows, cols, vals, (n, n))
+
+
+# ---------------------------------------------------------------- fingerprint
+
+def test_fingerprint_deterministic_across_rebuilds():
+    """Equal matrices (rebuilt from the same data) must produce the same
+    key: features are rounded to fixed precision before hashing."""
+    a = _zipfish(seed=5)
+    b = _zipfish(seed=5)
+    fa, fb = fingerprint(a), fingerprint(b)
+    assert fa.key == fb.key
+    assert fa.canonical == fb.canonical
+
+
+def test_fingerprint_near_equal_matrices_never_alias():
+    a = _zipfish(seed=5)
+    b = _zipfish(seed=5, tweak=True)
+    assert a.nnz == b.nnz and a.shape == b.shape
+    fa, fb = fingerprint(a), fingerprint(b)
+    assert fa.key != fb.key  # index move shifts affinity features > 1e-6
+
+
+def test_fingerprint_key_includes_exact_shape_and_nnz():
+    a = _zipfish(seed=7, n=320)
+    sub = CSR(a.row_ptrs[:301], a.col_idxs[: a.row_ptrs[300]],
+              a.nnz_vals[: a.row_ptrs[300]], (300, 320))
+    assert fingerprint(a).key != fingerprint(sub).key
+
+
+# --------------------------------------------------------------------- cache
+
+def test_cache_equal_hits_near_equal_misses(tmp_path):
+    cache = ScheduleCache(path=str(tmp_path / "sched.json"))
+    fp = fingerprint(_zipfish(seed=1))
+    sched = Schedule("bsr", 64, 0.95)
+    assert cache.get(fp) is None
+    cache.put(fp, sched, "tree", 1e-4)
+    assert cache.get(fingerprint(_zipfish(seed=1))) == sched
+    assert cache.get(fingerprint(_zipfish(seed=1, tweak=True))) is None
+    tel = cache.telemetry()
+    assert tel["hits"] == 1 and tel["misses"] == 2
+
+
+def test_cache_detects_hash_collisions():
+    """Two fingerprints forced onto one hash key must not alias: the stored
+    canonical vector is revalidated on every hit."""
+    cache = ScheduleCache()
+    fa = fingerprint(_zipfish(seed=1))
+    fb_real = fingerprint(_zipfish(seed=2))
+    fb = fb_real.__class__(key=fa.key, canonical=fb_real.canonical,
+                           features=fb_real.features, shape=fb_real.shape,
+                           nnz=fb_real.nnz)
+    cache.put(fa, Schedule("bsr", 64, 0.95), "tree")
+    assert cache.get(fb) is None
+    assert cache.telemetry()["collisions"] == 1
+
+
+def test_cache_lru_eviction_order():
+    cache = ScheduleCache(capacity=2)
+    fps = [fingerprint(_zipfish(seed=s)) for s in (1, 2, 3)]
+    s = Schedule("bsr", 64, 1.0)
+    cache.put(fps[0], s, "tree")
+    cache.put(fps[1], s, "tree")
+    assert cache.get(fps[0]) is not None   # refresh fps[0]
+    cache.put(fps[2], s, "tree")           # evicts fps[1], the LRU entry
+    assert len(cache) == 2
+    assert cache.get(fps[1]) is None
+    assert cache.get(fps[0]) is not None
+    assert cache.telemetry()["evictions"] == 1
+
+
+def test_cache_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "sched.json")
+    cache = ScheduleCache(path=path)
+    fp = fingerprint(_zipfish(seed=4))
+    sched = Schedule("bsr", 128, 1.0, layout="sell", slice_height=8, n_rhs=4)
+    cache.put(fp, sched, "verify", 2.5e-4)
+    cache.flush()
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["version"] == 1 and len(raw["entries"]) == 1
+    reloaded = ScheduleCache(path=path)
+    assert reloaded.get(fp) == sched
+    # reopening with a smaller capacity trims from the LRU end
+    reloaded.put(fingerprint(_zipfish(seed=5)), sched, "tree")
+    reloaded.flush()
+    trimmed = ScheduleCache(path=path, capacity=1)
+    assert len(trimmed) == 1
+    assert trimmed.get(fp) is None          # older entry was trimmed
+    assert trimmed.telemetry()["evictions"] == 1
+
+
+def test_cache_context_pins_tuner_configuration(tmp_path, tuner):
+    """A cache file persisted under one (kernel, platform) must not serve
+    hits to a service tuned for another configuration."""
+    path = str(tmp_path / "sched.json")
+    svc = SelectorService(tuner, cache=ScheduleCache(path=path))
+    name, _, A = HELD[0]
+    svc.submit(name, A)
+    svc.run()
+    svc.cache.flush()
+    assert svc.cache.context == "spmv:tpu_v5e:rhs1"
+    other = ScheduleTuner("spadd", TPU_V5E)
+    other.tree = tuner.tree
+    other.feature_names = tuner.feature_names
+    svc2 = SelectorService(other, cache=ScheduleCache(path=path))
+    fp = fingerprint(A)
+    assert svc2.cache.get(fp) is None
+    assert svc2.cache.telemetry()["context_misses"] == 1
+    # same configuration reopened: still a hit
+    svc3 = SelectorService(tuner, cache=ScheduleCache(path=path))
+    assert svc3.cache.get(fp) is not None
+
+
+def test_schedule_dict_roundtrip():
+    s = Schedule("bsr", 32, 0.8, layout="sell", slice_height=16, n_rhs=8)
+    assert schedule_from_dict(schedule_to_dict(s)) == s
+
+
+# ----------------------------------------------------------------- predictor
+
+def test_predictor_returns_full_schedule_with_confidence(tuner):
+    pred = SchedulePredictor(tuner).predict(fingerprint(HELD[0][2]))
+    assert isinstance(pred.schedule, Schedule)
+    assert pred.schedule in candidate_schedules()
+    assert 0.0 <= pred.confidence <= 1.0
+    assert pred.tree_time_s > 0
+
+
+def test_predictor_dense_shortcut(tuner):
+    rng = np.random.default_rng(0)
+    dense = CSR.from_dense((rng.random((64, 64)) < 0.5).astype(np.float32))
+    pred = SchedulePredictor(tuner).predict(fingerprint(dense))
+    assert pred.schedule.backend == "dense"
+    assert pred.confidence == 1.0
+
+
+# ------------------------------------------------------------- service / e2e
+
+def test_selector_end_to_end_acceptance(tmp_path, tuner):
+    """The ISSUE acceptance bar: on a held-out corpus slice with repeat
+    traffic, schedules are within 10% of the full-sweep argmin on >= 80% of
+    matrices while the simulation verify pass runs on < 30% of requests;
+    cache hit rate and bucketed-batch structure are asserted."""
+    svc = SelectorService(tuner, cache=ScheduleCache(path=str(tmp_path / "c.json")),
+                          batch_max=8)
+    rng = np.random.default_rng(0)
+    for rep in range(2):  # every held-out matrix requested twice
+        for name, _, A in HELD:
+            x = rng.standard_normal(A.shape[1]).astype(np.float32) \
+                if rep == 0 and name.endswith("_0") else None
+            svc.submit(f"{rep}:{name}", A, x)
+    decisions = svc.run()
+    n_req = len(decisions)
+    assert n_req == 2 * len(HELD)
+
+    by_name = {d.name: d for d in decisions}
+    within = 0
+    for name, _, A in HELD:
+        d = by_name[f"0:{name}"]
+        t_sel = _modeled_time("spmv", A, TPU_V5E, d.schedule)
+        t_best = min(_modeled_time("spmv", A, TPU_V5E, s)
+                     for s in candidate_schedules())
+        within += t_sel <= 1.1 * t_best
+        # the repeat request must be a cache hit with the same schedule
+        d2 = by_name[f"1:{name}"]
+        assert d2.source == "cache"
+        assert d2.schedule == d.schedule
+    tel = svc.telemetry()
+    assert within >= 0.8 * len(HELD), f"only {within}/{len(HELD)} within 10%"
+    assert tel["fallback_fraction"] < 0.30
+    assert tel["cache_hit_rate"] >= 0.5 - 1e-9
+    # bucketing: same-schedule requests in a batch share a kernel program,
+    # so the tick pays for fewer kernel builds than requests
+    assert tel["buckets"] < tel["requests"]
+    assert tel["batches"] == -(-n_req // 8)
+    assert tel["max_bucket_size"] > 1
+    # executed requests (those that carried an RHS) ran the bucket's kernel
+    executed = [d for d in decisions if d.y is not None]
+    assert executed
+    for d in executed:
+        name = d.name.split(":", 1)[1]
+        A = next(a for n, _, a in HELD if n == name)
+        assert d.y.shape == (A.shape[0],)
+        assert np.isfinite(d.y).all()
+
+
+def test_selector_feeds_verify_results_back(tuner):
+    """Low-confidence requests route through the simulation verify pass,
+    land in the cache, and produce retraining examples."""
+    svc = SelectorService(tuner, cache=ScheduleCache(),
+                          confidence_threshold=2.0)  # force fallback
+    name, _, A = HELD[0]
+    svc.submit(name, A)
+    svc.submit(name, A)
+    decisions = svc.run()
+    assert decisions[0].source == "verify"
+    assert decisions[1].source == "cache"  # fed back, not re-verified
+    assert decisions[1].schedule == decisions[0].schedule
+    # verified fallback = exact sweep argmin
+    t_best = min(_modeled_time("spmv", A, TPU_V5E, s)
+                 for s in candidate_schedules())
+    assert decisions[0].modeled_time_s == pytest.approx(t_best)
+    assert len(svc.retraining_examples) == 1
+    row = svc.retraining_examples[0]
+    assert set(row) == {"features", "cfg", "log10_time_s"}
+
+
+def _schedule_dense(A, sched):
+    """Dense equivalent of the container a schedule builds (a quantile-capped
+    ELL schedule intentionally drops tail blocks, so the oracle must drop
+    them too)."""
+    from repro.core.csr import ELLBSR
+    from repro.kernels.bsr_spmv.ops import prepare_with_schedule
+    a = prepare_with_schedule(A, sched)
+    if not isinstance(a, ELLBSR) or sched.ell_quantile >= 1.0:
+        return A.to_dense()
+    bs = a.block_size
+    n_br, n_bc = a.block_indices.shape[0], -(-a.shape[1] // bs)
+    grid = np.zeros((n_br, n_bc, bs, bs), np.float32)
+    np.add.at(grid, (np.arange(n_br)[:, None], a.block_cols),
+              a.blocks[a.block_indices])
+    dense = grid.transpose(0, 2, 1, 3).reshape(n_br * bs, n_bc * bs)
+    return dense[: A.shape[0], : A.shape[1]]
+
+
+def test_selector_executes_correct_spmv(tuner):
+    """A request carrying an RHS gets y = A @ x under whatever schedule the
+    service picked (oracle-checked against that schedule's semantics)."""
+    rng = np.random.default_rng(3)
+    svc = SelectorService(tuner, cache=ScheduleCache())
+    name, _, A = HELD[1]
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    svc.submit(name, A, x)
+    (d,) = svc.run()
+    expected = _schedule_dense(A, d.schedule) @ x
+    np.testing.assert_allclose(d.y, expected, rtol=2e-4, atol=2e-4)
+
+
+def test_serve_cli_smoke(tmp_path, capsys):
+    from repro.selector.serve import main
+    tel = main(["--requests", "10", "--train-mats", "9", "--serve-mats", "5",
+                "--n-min", "256", "--n-max", "384", "--batch", "4",
+                "--cache-path", str(tmp_path / "cache.json")])
+    assert tel["requests"] == 10
+    assert tel["batches"] == 3
+    assert (tmp_path / "cache.json").exists()
+    out = capsys.readouterr().out
+    assert "cache hit rate" in out
