@@ -19,10 +19,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.core import (GENERATORS, TPU_V5E, ScheduleTuner, corpus,
                         run_spmv_model, run_spmv_sell_model)
 from repro.core.counters import BYTES_F32, vmem_scale_for
-from repro.kernels import bsr_spmv
+from repro.sparse import plan
 from .common import FULL, Row, time_call
 
 
@@ -80,11 +82,9 @@ def run() -> List[Row]:
         gather_fn = _spmv_jnp_gather(A, x)
         us_gather = time_call(gather_fn)
         bs_cpu = min(sched.block_size, 128)
-        a_prepped = (bsr_spmv.ops.prepare_sell(A, bs_cpu, sched.slice_height)
-                     if sched.layout == "sell"
-                     else bsr_spmv.ops.prepare(A, bs_cpu))
-        us_block = time_call(
-            lambda: np.asarray(bsr_spmv.bsr_spmv(a_prepped, x, backend="jnp")))
+        sched_cpu = dataclasses.replace(sched, block_size=bs_cpu)
+        p = plan("spmv", (A,), schedule=sched_cpu, backend="jnp")
+        us_block = time_call(lambda: np.asarray(p.execute(x)))
         rows.append((f"hillclimb/spmv/{cat}", us_block,
                      f"modeled_speedup={sp:.2f}x;sched={sched.layout}-"
                      f"bs{sched.block_size}q{sched.ell_quantile}"

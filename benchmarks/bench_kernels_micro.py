@@ -1,8 +1,10 @@
-"""Wall-clock microbenchmarks of the five kernels (jnp backend on CPU;
-the Pallas TPU schedules are exercised in interpret mode by tests), plus
-the host-side ``prepare()`` format-conversion pipeline — prep is on the
-serving path, so it gets its own rows, including the speedup of the
-vectorized ``ELLBSR.from_bsr`` over the seed's per-row Python loop."""
+"""Wall-clock microbenchmarks of the five kernels through the plan/execute
+facade (jnp backend on CPU; the Pallas TPU schedules are exercised in
+interpret mode by tests), plus the host-side prep pipeline — prep is on the
+serving path, so plan *build* time (container prep + symbolic phase +
+device staging) gets its own ``plan_build/*`` rows next to the execute
+rows, including the speedup of the vectorized ``ELLBSR.from_bsr`` over the
+seed's per-row Python loop."""
 from __future__ import annotations
 
 from typing import List
@@ -11,10 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CSR
-from repro.core.csr import ELLBSR
-from repro.core.synthetic import gen_zipf
-from repro.kernels import (bsr_spadd, bsr_spgemm, bsr_spmv, flash_attention,
-                           moe_gmm)
+from repro.core.autotune import Schedule
+from repro.core.csr import BSR, ELLBSR
+from repro.core.synthetic import gen_cyclic, gen_zipf
+from repro.sparse import SparseTensor, plan
 from .common import FULL, Row, time_call
 
 RNG = np.random.default_rng(0)
@@ -56,9 +58,7 @@ def run() -> List[Row]:
 
     # ------------------------------------------------ host prep (ELL / SELL)
     # Prep-bound shape: many block-rows, few blocks each (cyclic category) —
-    # the regime where per-row Python looping used to dominate prepare().
-    from repro.core.csr import BSR
-    from repro.core.synthetic import gen_cyclic
+    # the regime where per-row Python looping used to dominate prep.
     P = gen_cyclic(2 * n, seed=1)
     bs_prep = 8
     bsr = BSR.from_csr(P, bs_prep)
@@ -68,51 +68,82 @@ def run() -> List[Row]:
                  f"n={2 * n};bs={bs_prep};n_br={bsr.n_block_rows};"
                  f"rowloop_us={us_loop:.0f};"
                  f"vectorized_speedup={us_loop / max(us_vec, 1e-9):.2f}x"))
-    us_sell = time_call(lambda: bsr_spmv.ops.prepare_sell(P, bs_prep, 8, 64),
-                        repeats=5)
+    sell_sched = Schedule("bsr", bs_prep, 1.0, layout="sell", slice_height=8)
+    us_sell = time_call(
+        lambda: SparseTensor.build_container(P, sell_sched), repeats=5)
     rows.append(("kernels/bsr_spmv_prepare_sell", us_sell,
                  f"n={2 * n};bs={bs_prep};C=8;sigma=64;incl_bsr_from_csr"))
 
-    ell = bsr_spmv.ops.prepare(A, 128)
-    us = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(ell, x, backend="jnp")))
+    # -------------------------------------- plan build vs execute (facade)
+    # Plan build = container prep + symbolic phase + device staging: the
+    # serving-path cost a cache hit amortizes; reported per op.
+    ell_sched = Schedule("bsr", 128, 1.0)
+    us_pb = time_call(lambda: plan("spmv", (A,), schedule=ell_sched,
+                                   backend="jnp"), repeats=5)
+    rows.append(("plan_build/spmv", us_pb,
+                 f"n={n};nnz={A.nnz};bs=128;layout=ell"))
+    p_spmv = plan("spmv", (A,), schedule=ell_sched, backend="jnp")
+    us = time_call(lambda: np.asarray(p_spmv.execute(x)))
     rows.append(("kernels/bsr_spmv", us,
                  f"n={n};nnz={A.nnz};gflops={2*A.nnz/us/1e3:.2f}"))
 
     # ------------------------------ SELL bucketed SpMV + multi-RHS SpMM path
     Z = gen_zipf(n, seed=5)
     bs_z = n // 16  # 16 block-rows: the acceptance shape at any bench scale
-    ell_z = bsr_spmv.ops.prepare(Z, bs_z)
-    sell_z = bsr_spmv.ops.prepare_sell(Z, bs_z, 8, 64)
-    us_ez = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(ell_z, x, backend="jnp")))
-    us_sz = time_call(lambda: np.asarray(bsr_spmv.bsr_spmv(sell_z, x, backend="jnp")))
+    sched_ez = Schedule("bsr", bs_z, 1.0)
+    sched_sz = Schedule("bsr", bs_z, 1.0, layout="sell", slice_height=8)
+    p_ez = plan("spmv", (Z,), schedule=sched_ez, backend="jnp")
+    p_sz = plan("spmv", (Z,), schedule=sched_sz, backend="jnp")
+    ell_z, sell_z = p_ez.operands[0].to_host(), p_sz.operands[0].to_host()
+    us_ez = time_call(lambda: np.asarray(p_ez.execute(x)))
+    us_sz = time_call(lambda: np.asarray(p_sz.execute(x)))
     rows.append(("kernels/bsr_spmv_sell_zipf", us_sz,
                  f"n={n};ell_us={us_ez:.0f};"
                  f"ell_pad={ell_z.ell_padding_fraction():.3f};"
                  f"sell_pad={sell_z.sell_padding_fraction():.3f}"))
     k = 8
     X = jnp.asarray(RNG.standard_normal((n, k)), jnp.float32)
-    us_mm = time_call(lambda: np.asarray(bsr_spmv.bsr_spmm(sell_z, X, backend="jnp")))
+    p_mm = plan("spmm", (Z,), schedule=sched_sz, backend="jnp")
+    us_mm = time_call(lambda: np.asarray(p_mm.execute(X)))
     rows.append(("kernels/bsr_spmm_sell_zipf", us_mm,
                  f"n={n};k={k};per_rhs_us={us_mm / k:.1f};spmv_us={us_sz:.1f}"))
 
-    us = time_call(lambda: bsr_spadd.bsr_spadd(A, B, 64, backend="jnp"))
+    # -------------------------------------------------------- spadd / spgemm
+    sched64 = Schedule("bsr", 64, 1.0)
+    us_pb = time_call(lambda: plan("spadd", (A, B), schedule=sched64,
+                                   backend="jnp"), repeats=3)
+    rows.append(("plan_build/spadd", us_pb, f"n={n};incl_symbolic"))
+    p_add = plan("spadd", (A, B), schedule=sched64, backend="jnp")
+    us = time_call(lambda: p_add.execute())
     rows.append(("kernels/bsr_spadd", us, f"n={n}"))
 
-    us = time_call(lambda: bsr_spgemm.bsr_spgemm(A, B, 64, backend="jnp"))
-    rows.append(("kernels/bsr_spgemm", us, f"n={n}"))
+    us_pb = time_call(lambda: plan("spgemm", (A, B), schedule=sched64,
+                                   backend="jnp"), repeats=3)
+    rows.append(("plan_build/spgemm", us_pb, f"n={n};incl_symbolic"))
+    p_mul = plan("spgemm", (A, B), schedule=sched64, backend="jnp")
+    us = time_call(lambda: p_mul.execute())
+    # layout axis: the SELL cell-flattening trick on the ragged pair lists
+    sched64_cells = Schedule("bsr", 64, 1.0, layout="sell")
+    p_cells = plan("spgemm", (A, B), schedule=sched64_cells, backend="jnp")
+    us_cells = time_call(lambda: p_cells.execute())
+    rows.append(("kernels/bsr_spgemm", us,
+                 f"n={n};cells_us={us_cells:.0f};"
+                 f"cells_speedup={us / max(us_cells, 1e-9):.2f}x"))
 
+    # --------------------------------------------------------------- moe_gmm
+    from repro.sparse import route_and_pad
     T, K, N, E = 512, 128, 256, 8
     toks = RNG.standard_normal((T, K)).astype(np.float32)
     eot = RNG.integers(0, E, T)
-    xq, te, _ = moe_gmm.route_and_pad(toks, eot, E, tile_m=128)
+    xq, te, _ = route_and_pad(toks, eot, E, tile_m=128)
     w = jnp.asarray(RNG.standard_normal((E, K, N)), jnp.float32)
-    us = time_call(lambda: np.asarray(moe_gmm.moe_gmm(
-        jnp.asarray(te), jnp.asarray(xq), w, backend="jnp")))
+    p_moe = plan("moe_gmm", (te,), tile_m=128, backend="jnp")
+    us = time_call(lambda: np.asarray(p_moe.execute(jnp.asarray(xq), w)))
     rows.append(("kernels/moe_gmm", us, f"T={T};E={E}"))
 
     S, D = 512, 64
     q = jnp.asarray(RNG.standard_normal((4, S, D)), jnp.float32)
-    us = time_call(lambda: np.asarray(flash_attention.flash_attention(
-        q, q, q, backend="jnp")))
+    p_fa = plan("flash_attention", (), backend="jnp")
+    us = time_call(lambda: np.asarray(p_fa.execute(q, q, q)))
     rows.append(("kernels/flash_attention_ref", us, f"S={S};D={D}"))
     return rows

@@ -14,6 +14,7 @@ import numpy as np
 from repro.core import ScheduleTuner, TPU_V5E, corpus
 from repro.core.autotune import _modeled_time, candidate_schedules
 from repro.selector import ScheduleCache, SelectorService, fingerprint
+from repro.sparse import plan
 from .common import FULL, Row, time_call
 
 
@@ -66,6 +67,18 @@ def run() -> List[Row]:
                  f"within10={within / len(held):.2f}"))
     rows.append(("selector/fingerprint", us_fp,
                  f"n={A0.shape[0]};nnz={A0.nnz}"))
+
+    # The facade path serving code actually takes: selector-resolved plan
+    # build (cache/tree/verify + prep) and the jitted execute, separately.
+    svc_plan = SelectorService(tuner, cache=ScheduleCache())
+    us_plan = time_call(lambda: plan("spmv", (A0,), selector=svc_plan),
+                        repeats=3)
+    p0 = plan("spmv", (A0,), selector=svc_plan)
+    x0 = np.random.default_rng(0).standard_normal(A0.shape[1]).astype(
+        np.float32)
+    us_exec = time_call(lambda: np.asarray(p0.execute(x0)), repeats=3)
+    rows.append(("selector/plan_build", us_plan,
+                 f"n={A0.shape[0]};source={p0.source};exec_us={us_exec:.0f}"))
     rows.append(("selector/full_sweep_select", us_sweep,
                  f"n_candidates={len(candidate_schedules())};"
                  f"speedup_vs_request={us_sweep / max(us_req, 1e-9):.1f}x"))

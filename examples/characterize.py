@@ -65,16 +65,14 @@ def main() -> None:
                   f"{t['bound']:>8s} {100*sb['frontend_stall_frac']:9.1f}% "
                   f"{100*sb['backend_stall_frac']:8.1f}%")
 
-    print("\nloop-driven schedule selection (SpMV):")
+    print("\nloop-driven schedule selection (SpMV, plan/execute facade):")
+    from repro.sparse import plan
     mats = corpus(n_matrices=27, n_min=384, n_max=1024, seed=1)
     for plat in PLATFORMS.values():
         tuner = ScheduleTuner("spmv", plat).fit(mats, max_mats=16)
-        sched, info = tuner.select(A)
-        layout = (f"sell C={sched.slice_height}" if sched.layout == "sell"
-                  else f"ell q={sched.ell_quantile}")
-        print(f"  {plat.name:9s} -> backend={sched.backend} "
-              f"block={sched.block_size} layout={layout} "
-              f"rhs={sched.n_rhs} t={info.get('verified_time_s', 0):.3e}s")
+        p = plan("spmv", (A,), selector=tuner)
+        print(f"  {plat.name:9s} -> {p.describe()} "
+              f"t={p.modeled_time_s or 0:.3e}s")
 
 
 if __name__ == "__main__":

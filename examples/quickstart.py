@@ -15,6 +15,7 @@ from repro.core import (PLATFORMS, TPU_V5E, ScheduleTuner, build_slice,
                         characterize, characterize_slice, compare_platforms,
                         corpus, grouped_importance)
 from repro.core.synthetic import gen_exponential
+from repro.sparse import plan
 
 TREE_KW = dict(max_depth=24, min_samples_leaf=1, min_samples_split=2)
 
@@ -45,16 +46,17 @@ def main() -> None:
     for kern, d in cmp.items():
         print(f"  {kern}: intrinsic={d['algorithm_intrinsic']}")
 
-    print("\n== 5. loop-driven schedule selection ==")
+    print("\n== 5. loop-driven schedule selection (plan/execute facade) ==")
     tuner = ScheduleTuner("spmv", TPU_V5E).fit(mats, max_mats=24)
     B = gen_exponential(2048, seed=7)
-    sched, info = tuner.select(B)
-    layout = (f"sell C={sched.slice_height}" if sched.layout == "sell"
-              else f"ell q={sched.ell_quantile}")
-    print(f"  new matrix (scale-free): backend={sched.backend} "
-          f"block={sched.block_size} layout={layout} rhs={sched.n_rhs} "
-          f"(tree={info['tree_time_s']:.2e}s, "
-          f"verified={info['verified_time_s']:.2e}s)")
+    # plan() resolves the Schedule through the fitted tuner, preps the
+    # container once, and returns a jitted executable (DESIGN.md §8).
+    p = plan("spmv", (B,), selector=tuner)
+    x = np.random.default_rng(0).standard_normal(B.shape[1]).astype(np.float32)
+    y = np.asarray(p.execute(x))
+    print(f"  new matrix (scale-free): {p.describe()} "
+          f"(modeled={p.modeled_time_s or 0:.2e}s); "
+          f"executed y[:3]={y[:3].round(3)}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
 """Serve a small model with batched requests (deliverable (b), serving
 flavor): prefill + decode loop with batching, latency stats, and the
-SpChar-driven MoE path demonstrated on a mixtral-family reduced config.
+SpChar-driven MoE decode path on a mixtral-family reduced config.
+
+The decode loop's MoE expert compute goes through the plan/execute facade
+(DESIGN.md §8): each tick's routing histogram is fingerprinted and looked
+up in the selector-backed ``ScheduleCache`` (``repro.sparse.
+moe_tile_schedule``), so recurring routing shapes reuse their grouped-GEMM
+tile choice instead of re-running the Eq. 5 imbalance rule — the same
+cache discipline the SpMV selector applies to matrices.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
 """
@@ -8,28 +15,64 @@ import argparse
 
 import numpy as np
 
+from repro.core import TPU_V5E
 from repro.launch.serve import main as serve_main
-from repro.core import TPU_V5E, select_moe_block_size
+from repro.selector import ScheduleCache
+from repro.sparse import moe_tile_schedule, plan, route_and_pad
+
+
+def decode_moe_ticks(n_ticks: int, d_model: int = 256, d_ff: int = 512,
+                     n_experts: int = 8, batch: int = 4,
+                     cache: ScheduleCache = None, seed: int = 0) -> dict:
+    """Run the decode-tick MoE expert compute through the facade.
+
+    Each tick: route the decode batch's tokens, obtain the grouped-GEMM
+    tile from the selector-backed cache, and execute the expert GEMM via
+    ``plan("moe_gmm", ...)``. Routing alternates between a balanced and a
+    hot-expert regime, the recurring traffic the cache exists for.
+    """
+    rng = np.random.default_rng(seed)
+    cache = cache if cache is not None else ScheduleCache()
+    w = rng.standard_normal((n_experts, d_model, d_ff)).astype(np.float32)
+    ticks = []
+    for t in range(n_ticks):
+        if t % 2 == 0:  # balanced routing regime
+            eot = rng.integers(0, n_experts, batch)
+        else:           # hot-expert regime: everyone routes to expert 0
+            eot = np.zeros(batch, dtype=np.int64)
+        counts = np.bincount(eot, minlength=n_experts).astype(np.float64)
+        sched = moe_tile_schedule(counts, d_model, TPU_V5E, cache=cache)
+        tokens = rng.standard_normal((batch, d_model)).astype(np.float32)
+        x, tile_e, _ = route_and_pad(tokens, eot, n_experts,
+                                     tile_m=sched.block_size)
+        p = plan("moe_gmm", (tile_e,), schedule=sched, backend="jnp")
+        out = np.asarray(p.execute(x, w))
+        ticks.append((sched.block_size, out.shape))
+    tel = cache.telemetry()
+    return {"ticks": ticks, "cache_hit_rate": tel["hit_rate"],
+            "cache_entries": tel["entries"]}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x22b")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
     args = ap.parse_args()
 
     res = serve_main(["--arch", args.arch, "--reduced",
                       "--requests", str(args.requests), "--batch", "4",
-                      "--prompt-len", "64", "--gen-len", "16",
+                      "--prompt-len", "64", "--gen-len", str(args.gen_len),
                       "--attn-chunk", "32"])
     print(f"throughput: {res['throughput_tok_s']:.1f} tok/s")
 
-    # SpChar integration demo: the MoE grouped-GEMM tile size chosen from
-    # the Eq. 5 imbalance of a routing histogram.
-    for routing in (np.full(8, 100.0), np.array([600.] + [10.] * 7)):
-        bs = select_moe_block_size(routing, 512, TPU_V5E)
-        print(f"routing counts {routing.astype(int).tolist()} -> "
-              f"moe_gmm tile_m={bs}")
+    # Decode-tick MoE through the selector-backed facade cache: tile
+    # choices per routing fingerprint, recurring regimes hit the cache.
+    moe = decode_moe_ticks(args.gen_len, cache=ScheduleCache())
+    tiles = sorted({bs for bs, _ in moe["ticks"]})
+    print(f"decode MoE: {len(moe['ticks'])} ticks, tile_m choices {tiles}, "
+          f"cache hit rate {moe['cache_hit_rate']:.2f} "
+          f"({moe['cache_entries']:.0f} entries)")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,29 @@ python -m repro.selector.serve --requests 10 --train-mats 9 --serve-mats 5 \
   --n-min 256 --n-max 384 --batch 4 --cache-path "$tmpdir/cache.json"
 test -s "$tmpdir/cache.json"
 
+# plan()-path smoke: selector-backed SpMV through the facade (DESIGN.md §8)
+python - <<'PY'
+import numpy as np
+from repro.core import ScheduleTuner, TPU_V5E, corpus
+from repro.core.synthetic import gen_zipf
+from repro.selector import ScheduleCache, SelectorService
+from repro.sparse import launch_count, plan, reset_counters
+
+tuner = ScheduleTuner("spmv", TPU_V5E).fit(
+    corpus(n_matrices=9, n_min=256, n_max=384, seed=3), max_mats=9)
+svc = SelectorService(tuner, cache=ScheduleCache())
+A = gen_zipf(300, seed=1)
+x = np.random.default_rng(0).standard_normal(300).astype(np.float32)
+reset_counters()
+p = plan("spmv", (A,), selector=svc)
+y = np.asarray(p.execute(x))
+assert y.shape == (300,) and np.isfinite(y).all()
+assert launch_count("spmv") == 1
+assert plan("spmv", (A,), selector=svc).source == "selector-cache"
+np.testing.assert_allclose(y, A.to_dense() @ x, rtol=2e-4, atol=2e-4)
+print(f"plan smoke OK: {p.describe()} (source={p.source})")
+PY
+
 # benchmark JSON trajectory emission stays machine-readable
 python -m benchmarks.run selector --json "$tmpdir/bench.json"
 python - "$tmpdir/bench.json" <<'PY'

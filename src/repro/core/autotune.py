@@ -31,6 +31,7 @@ ELL_QUANTILES = (0.8, 0.95, 1.0)
 SLICE_HEIGHTS = (4, 8, 16)      # SELL slice heights swept as a schedule axis
 SELL_SIGMA = 64                 # sorting window (block-rows); fixed, not swept
 DENSE_DENSITY_THRESHOLD = 0.25  # above this, a dense matmul wins trivially
+TUNER_TREE_DEPTH = 14           # cost-tree depth shared by fit() and refit()
 # Names of the schedule-parameter features appended to the static metrics.
 CFG_FEATURES = ("cfg_block_size", "cfg_ell_quantile", "cfg_slice_height",
                 "cfg_n_rhs")
@@ -85,6 +86,10 @@ class ScheduleTuner:
         self.tree: Optional[DecisionTreeRegressor] = None
         self.feature_names: List[str] = []
         self.fit_simulations_ = 0
+        # Training rows kept so refit() can fold in online feedback
+        # (SelectorService.retraining_examples) without re-simulating.
+        self._train_rows: Optional[np.ndarray] = None
+        self._train_ys: Optional[np.ndarray] = None
 
     def fit(self, mats: Sequence[Matrix], max_mats: int = 64, seed: int = 0,
             prune_top_k: Optional[int] = None, bootstrap_mats: int = 8
@@ -125,11 +130,28 @@ class ScheduleTuner:
                 self.fit_simulations_ += 1
             if (prune_top_k is not None and provisional is None
                     and count + 1 >= min(bootstrap_mats, len(idx))):
-                provisional = DecisionTreeRegressor(max_depth=14).fit(
+                provisional = DecisionTreeRegressor(max_depth=TUNER_TREE_DEPTH).fit(
                     np.asarray(rows), np.asarray(ys))
         self.feature_names = feature_names or []
-        self.tree = DecisionTreeRegressor(max_depth=14).fit(
-            np.asarray(rows), np.asarray(ys))
+        self._train_rows = np.asarray(rows)
+        self._train_ys = np.asarray(ys)
+        self.tree = DecisionTreeRegressor(max_depth=TUNER_TREE_DEPTH).fit(
+            self._train_rows, self._train_ys)
+        return self
+
+    def refit(self, extra_rows: Sequence[Sequence[float]],
+              extra_ys: Sequence[float]) -> "ScheduleTuner":
+        """Fold online feedback rows (same static+cfg feature space as
+        ``fit``) into the training set and retrain the tree — the explicit
+        retraining path ``SelectorService.refit`` drives; no simulation
+        re-runs."""
+        assert self.tree is not None, "call fit() before refit()"
+        rows = np.concatenate([self._train_rows,
+                               np.asarray(extra_rows, dtype=float)], axis=0)
+        ys = np.concatenate([self._train_ys,
+                             np.asarray(extra_ys, dtype=float)], axis=0)
+        self._train_rows, self._train_ys = rows, ys
+        self.tree = DecisionTreeRegressor(max_depth=TUNER_TREE_DEPTH).fit(rows, ys)
         return self
 
     def predict_time(self, static: Dict[str, float], sched: Schedule) -> float:

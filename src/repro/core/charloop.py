@@ -12,7 +12,11 @@ Pipeline:
      importance varies are architecture-induced (§3.5's escape from the
      correlation-implies-causation dilemma).
   5. (autotune.py) use the trained trees as fast performance estimators to
-     select kernel schedules — the loop "facilitating optimization".
+     select kernel schedules — the loop "facilitating optimization". The
+     serving form of this step is the plan/execute facade: a fitted tuner
+     plugs straight into ``repro.sparse.plan(op, operands, selector=tuner)``
+     (DESIGN.md §8), which preps the chosen container and returns the
+     jitted launch.
 """
 from __future__ import annotations
 

@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the sparse hot spots (DESIGN.md §3).
 
+Callers should go through the plan/execute facade — ``repro.sparse.plan``
+(DESIGN.md §8) — not these modules: the ``ops.py`` entry points are now
+thin delegating shims kept for backward compatibility.
+
 Each kernel directory has:
   kernel.py  pl.pallas_call + BlockSpec schedule (TPU target; validated in
-             interpret mode on CPU)
-  ops.py     jit'd public wrapper with backend dispatch
-             ("pallas" | "interpret" | "jnp")
+             interpret mode on CPU); consumed by repro/sparse/ops_builtin
+  ops.py     legacy entry-point shims (deprecated; delegate to the facade)
+             + host helpers (symbolic phases, oracles, device exporters)
   ref.py     pure-jnp oracle
 
 Kernels:

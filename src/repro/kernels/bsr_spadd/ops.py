@@ -1,16 +1,23 @@
-"""Public SpADD op: symbolic (host) + numeric (kernel) phases."""
+"""SpADD symbolic phase (host, vectorized) + the legacy entry-point shim.
+
+The union block structure is computed with numpy bulk ops (repeat /
+unique / scatter) — no per-row Python loops; host prep is on the serving
+path. The numeric phase lives behind the facade
+(``repro.sparse.plan("spadd", ...)``).
+"""
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ...core.csr import CSR, BSR
-from ..common import resolve_backend
-from .kernel import bsr_spadd_pallas
-from .ref import ref_block_union_add
+
+
+def _block_keys(bsr: BSR, n_bc: int) -> np.ndarray:
+    rows = np.repeat(np.arange(bsr.n_block_rows, dtype=np.int64),
+                     bsr.blocks_per_row())
+    return rows * n_bc + bsr.block_cols.astype(np.int64)
 
 
 def spadd_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
@@ -22,57 +29,31 @@ def spadd_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
     appended zero block).
     """
     n_br = max(bsr_a.n_block_rows, bsr_b.n_block_rows)
-    a_sent, b_sent = bsr_a.n_blocks, bsr_b.n_blocks
-    c_cols, ia, ib = [], [], []
+    n_bc = max(-(-bsr_a.shape[1] // bsr_a.block_size),
+               -(-bsr_b.shape[1] // bsr_b.block_size))
+    keys_a = _block_keys(bsr_a, n_bc)
+    keys_b = _block_keys(bsr_b, n_bc)
+    uk, inv = np.unique(np.concatenate([keys_a, keys_b]),
+                        return_inverse=True)
+    n_c = int(uk.size)
+    ia = np.full(n_c, bsr_a.n_blocks, dtype=np.int32)
+    ib = np.full(n_c, bsr_b.n_blocks, dtype=np.int32)
+    ia[inv[: keys_a.size]] = np.arange(keys_a.size, dtype=np.int32)
+    ib[inv[keys_a.size:]] = np.arange(keys_b.size, dtype=np.int32)
+    c_cols = (uk % n_bc).astype(np.int32)
     c_ptrs = np.zeros(n_br + 1, dtype=np.int64)
-    for br in range(n_br):
-        amap = {}
-        if br < bsr_a.n_block_rows:
-            for k in range(bsr_a.block_ptrs[br], bsr_a.block_ptrs[br + 1]):
-                amap[int(bsr_a.block_cols[k])] = k
-        bmap = {}
-        if br < bsr_b.n_block_rows:
-            for k in range(bsr_b.block_ptrs[br], bsr_b.block_ptrs[br + 1]):
-                bmap[int(bsr_b.block_cols[k])] = k
-        union = sorted(set(amap) | set(bmap))
-        for col in union:
-            c_cols.append(col)
-            ia.append(amap.get(col, a_sent))
-            ib.append(bmap.get(col, b_sent))
-        c_ptrs[br + 1] = len(c_cols)
-    return (c_ptrs, np.asarray(c_cols, np.int32),
-            np.asarray(ia, np.int32), np.asarray(ib, np.int32))
+    np.add.at(c_ptrs, uk // n_bc + 1, 1)
+    c_ptrs = np.cumsum(c_ptrs)
+    return c_ptrs, c_cols, ia, ib
 
 
 def bsr_spadd(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto",
               schedule=None) -> BSR:
-    """C = A + B via block-union schedule; returns C as BSR.
+    """C = A + B; returns C as BSR.
 
-    ``schedule``: an optional pre-selected ``core.autotune.Schedule`` (from
-    the selector service); its block size overrides ``block_size``.
+    .. deprecated:: use ``repro.sparse.plan("spadd", (a, b), ...)`` — this
+       shim delegates there (DESIGN.md §8 migration table).
     """
-    if schedule is not None:
-        if schedule.backend == "dense":
-            raise ValueError("dense schedules have no BSR path; dispatch a "
-                             "dense matmul instead")
-        block_size = schedule.block_size
-    if a.shape != b.shape:
-        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
-    backend = resolve_backend(backend)
-    bsr_a = BSR.from_csr(a, block_size)
-    bsr_b = BSR.from_csr(b, block_size)
-    c_ptrs, c_cols, ia, ib = spadd_symbolic(bsr_a, bsr_b)
-    bs = block_size
-    a_blocks = jnp.concatenate(
-        [jnp.asarray(bsr_a.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
-    b_blocks = jnp.concatenate(
-        [jnp.asarray(bsr_b.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
-    ia_j, ib_j = jnp.asarray(ia), jnp.asarray(ib)
-    if ia.size == 0:
-        c_blocks = np.zeros((0, bs, bs), np.float32)
-    elif backend == "jnp":
-        c_blocks = np.asarray(ref_block_union_add(ia_j, ib_j, a_blocks, b_blocks))
-    else:
-        c_blocks = np.asarray(bsr_spadd_pallas(
-            ia_j, ib_j, a_blocks, b_blocks, interpret=(backend == "interpret")))
-    return BSR(c_ptrs, c_cols, c_blocks, a.shape, block_size)
+    from ...sparse import plan
+    return plan("spadd", (a, b), schedule=schedule, backend=backend,
+                block_size=block_size).execute()

@@ -1,15 +1,69 @@
-"""Public SpGEMM op: symbolic (host) + numeric (Pallas) phases (Alg. 2)."""
+"""SpGEMM symbolic phase (host, vectorized) + the legacy entry-point shim.
+
+Two numeric schedules (the op's ``layout`` axis in the facade registry):
+  ell    block-pairs padded per output block to ``max_pairs`` — one hub
+         output block pads every other block's pair list (kernel.py grid
+         (n_c, max_pairs)).
+  sell   the SELL cell-flattening trick applied to the ragged Gustavson
+         block-rows: the (output block, pair) schedule is flattened to one
+         grid step per real pair — zero padding, ragged work becomes grid
+         steps that never launch (kernel.py grid (n_cells,)).
+
+The symbolic phase is pure numpy bulk ops (np.repeat / argsort / unique) —
+no per-row Python loops; host prep is on the serving path.
+"""
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from ...core.csr import CSR, BSR
-from ..common import resolve_backend
-from .kernel import bsr_spgemm_pallas
-from .ref import ref_pair_gemm
+
+
+def _gustavson_join(bsr_a: BSR, bsr_b: BSR
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """All (a_block, b_block) contribution pairs in A-row-major order
+    (= Gustavson's scan order), as flat arrays (pair_a, pair_b, c_key)
+    where c_key = c_block_row * n_bc_c + c_block_col."""
+    n_bc_c = -(-bsr_b.shape[1] // bsr_b.block_size)
+    if bsr_a.n_blocks == 0 or bsr_b.n_block_rows == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, z
+    a_rows = np.repeat(np.arange(bsr_a.n_block_rows, dtype=np.int64),
+                       bsr_a.blocks_per_row())
+    a_cols = bsr_a.block_cols.astype(np.int64)
+    b_bpr = bsr_b.blocks_per_row()
+    safe = np.minimum(a_cols, bsr_b.n_block_rows - 1)
+    cnt = np.where(a_cols < bsr_b.n_block_rows, b_bpr[safe], 0)
+    total = int(cnt.sum())
+    pa = np.repeat(np.arange(bsr_a.n_blocks, dtype=np.int64), cnt)
+    starts = np.concatenate([[0], np.cumsum(cnt)])
+    pb = (np.arange(total, dtype=np.int64) - np.repeat(starts[:-1], cnt)
+          + np.repeat(bsr_b.block_ptrs[safe], cnt))
+    c_key = np.repeat(a_rows, cnt) * n_bc_c + bsr_b.block_cols[pb]
+    return pa, pb, c_key
+
+
+def _group_pairs(bsr_a: BSR, bsr_b: BSR):
+    """Join + stable group-by output block. Returns (c_ptrs, c_cols, gid,
+    pos, pa, pb, n_c) with pairs sorted by output block, Gustavson order
+    preserved inside each group (stable sort)."""
+    pa, pb, c_key = _gustavson_join(bsr_a, bsr_b)
+    n_bc_c = -(-bsr_b.shape[1] // bsr_b.block_size)
+    order = np.argsort(c_key, kind="stable")
+    key_s, pa_s, pb_s = c_key[order], pa[order], pb[order]
+    uk, first, counts = np.unique(key_s, return_index=True,
+                                  return_counts=True)
+    n_c = int(uk.size)
+    gid = np.repeat(np.arange(n_c, dtype=np.int64), counts)
+    pos = np.arange(key_s.size, dtype=np.int64) - np.repeat(first, counts)
+    c_cols = (uk % n_bc_c).astype(np.int32)
+    c_rows = uk // n_bc_c
+    c_ptrs = np.zeros(bsr_a.n_block_rows + 1, dtype=np.int64)
+    np.add.at(c_ptrs, c_rows + 1, 1)
+    c_ptrs = np.cumsum(c_ptrs)
+    return c_ptrs, c_cols, gid, pos, pa_s, pb_s, n_c
 
 
 def spgemm_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
@@ -20,64 +74,37 @@ def spgemm_symbolic(bsr_a: BSR, bsr_b: BSR) -> Tuple[np.ndarray, np.ndarray,
     are (n_c_blocks, max_pairs) int32 padded with the zero-block sentinel.
     Pairs are enumerated in A-row-major order = Gustavson's scan order.
     """
-    b_rows = {}
-    for br in range(bsr_b.n_block_rows):
-        lo, hi = int(bsr_b.block_ptrs[br]), int(bsr_b.block_ptrs[br + 1])
-        b_rows[br] = {int(bsr_b.block_cols[k]): k for k in range(lo, hi)}
-    c_cols_all, pairs_all = [], []
-    c_ptrs = np.zeros(bsr_a.n_block_rows + 1, dtype=np.int64)
-    for br in range(bsr_a.n_block_rows):
-        contrib: dict = {}
-        for k in range(int(bsr_a.block_ptrs[br]), int(bsr_a.block_ptrs[br + 1])):
-            kk = int(bsr_a.block_cols[k])
-            for cj, bidx in b_rows.get(kk, {}).items():
-                contrib.setdefault(cj, []).append((k, bidx))
-        for cj in sorted(contrib):
-            c_cols_all.append(cj)
-            pairs_all.append(contrib[cj])
-        c_ptrs[br + 1] = len(c_cols_all)
-    n_c = len(c_cols_all)
-    mp = max((len(p) for p in pairs_all), default=1)
-    a_sent, b_sent = bsr_a.n_blocks, bsr_b.n_blocks
-    pair_a = np.full((n_c, mp), a_sent, dtype=np.int32)
-    pair_b = np.full((n_c, mp), b_sent, dtype=np.int32)
-    for i, plist in enumerate(pairs_all):
-        for j, (ka, kb) in enumerate(plist):
-            pair_a[i, j] = ka
-            pair_b[i, j] = kb
-    return c_ptrs, np.asarray(c_cols_all, np.int32), pair_a, pair_b
+    c_ptrs, c_cols, gid, pos, pa, pb, n_c = _group_pairs(bsr_a, bsr_b)
+    mp = int(pos.max()) + 1 if pos.size else 1
+    pair_a = np.full((n_c, mp), bsr_a.n_blocks, dtype=np.int32)
+    pair_b = np.full((n_c, mp), bsr_b.n_blocks, dtype=np.int32)
+    pair_a[gid, pos] = pa
+    pair_b[gid, pos] = pb
+    return c_ptrs, c_cols, pair_a, pair_b
+
+
+def spgemm_symbolic_cells(bsr_a: BSR, bsr_b: BSR
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+    """Cell-flattened symbolic phase: the SELL trick on Gustavson block-rows.
+
+    Returns (c_block_ptrs, c_block_cols, cell_a, cell_b, cell_c): one cell
+    per REAL contribution pair — no pair padding at all. ``cell_c`` is
+    nondecreasing (a C block's cells are consecutive), the output-residency
+    contract of the Pallas cells kernel, mirroring SELLBSR.cell_row.
+    """
+    c_ptrs, c_cols, gid, _, pa, pb, _ = _group_pairs(bsr_a, bsr_b)
+    return (c_ptrs, c_cols, pa.astype(np.int32), pb.astype(np.int32),
+            gid.astype(np.int32))
 
 
 def bsr_spgemm(a: CSR, b: CSR, block_size: int = 128, backend: str = "auto",
                schedule=None) -> BSR:
-    """C = A @ B via the block-pair Gustavson schedule; returns C as BSR.
+    """C = A @ B; returns C as BSR.
 
-    ``schedule``: an optional pre-selected ``core.autotune.Schedule`` (from
-    the selector service); its block size overrides ``block_size``.
+    .. deprecated:: use ``repro.sparse.plan("spgemm", (a, b), ...)`` — this
+       shim delegates there (DESIGN.md §8 migration table).
     """
-    if schedule is not None:
-        if schedule.backend == "dense":
-            raise ValueError("dense schedules have no BSR path; dispatch a "
-                             "dense matmul instead")
-        block_size = schedule.block_size
-    if a.shape[1] != b.shape[0]:
-        raise ValueError(f"inner dims mismatch {a.shape} @ {b.shape}")
-    backend = resolve_backend(backend)
-    bsr_a = BSR.from_csr(a, block_size)
-    bsr_b = BSR.from_csr(b, block_size)
-    c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(bsr_a, bsr_b)
-    bs = block_size
-    a_blocks = jnp.concatenate(
-        [jnp.asarray(bsr_a.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
-    b_blocks = jnp.concatenate(
-        [jnp.asarray(bsr_b.blocks), jnp.zeros((1, bs, bs), jnp.float32)])
-    if pair_a.shape[0] == 0:
-        c_blocks = np.zeros((0, bs, bs), np.float32)
-    elif backend == "jnp":
-        c_blocks = np.asarray(ref_pair_gemm(
-            jnp.asarray(pair_a), jnp.asarray(pair_b), a_blocks, b_blocks))
-    else:
-        c_blocks = np.asarray(bsr_spgemm_pallas(
-            jnp.asarray(pair_a), jnp.asarray(pair_b), a_blocks, b_blocks,
-            interpret=(backend == "interpret")))
-    return BSR(c_ptrs, c_cols, c_blocks, (a.shape[0], b.shape[1]), block_size)
+    from ...sparse import plan
+    return plan("spgemm", (a, b), schedule=schedule, backend=backend,
+                block_size=block_size).execute()

@@ -1,5 +1,7 @@
-"""Pure-jnp oracle for the SpGEMM block-pair numeric phase."""
+"""Pure-jnp oracles for the SpGEMM numeric phase (padded pairs + flat cells)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -11,3 +13,13 @@ def ref_pair_gemm(pair_a: jax.Array, pair_b: jax.Array, a_blocks: jax.Array,
     a = a_blocks[pair_a]  # (n_c, mp, bs, bs)
     b = b_blocks[pair_b]  # (n_c, mp, bs, bs)
     return jnp.einsum("kpab,kpbc->kac", a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_c_blocks",))
+def ref_cell_gemm(cell_a: jax.Array, cell_b: jax.Array, cell_c: jax.Array,
+                  a_blocks: jax.Array, b_blocks: jax.Array,
+                  n_c_blocks: int) -> jax.Array:
+    """Cell-flattened numeric phase: C.blocks[c] = sum over cells t with
+    cell_c[t] == c of a_blocks[cell_a[t]] @ b_blocks[cell_b[t]]."""
+    prods = jnp.einsum("tab,tbc->tac", a_blocks[cell_a], b_blocks[cell_b])
+    return jax.ops.segment_sum(prods, cell_c, num_segments=n_c_blocks)

@@ -1,11 +1,19 @@
-"""Public SpMV/SpMM ops: host-side format prep + layout/backend dispatch.
+"""Legacy SpMV/SpMM entry points — thin shims over the plan/execute facade.
 
-Two layouts (DESIGN.md §2.2-2.3):
-  ELLBSR  — globally padded, regular (n_br, max_blocks) grid.
-  SELLBSR — sliced padding; ragged schedule flattened to one grid step per
-            cell, results scattered back through the stored row permutation.
-Both expose ``jnp`` / ``interpret`` / ``pallas`` backends; ``bsr_spmv`` and
-``bsr_spmm`` dispatch on the container type.
+The real dispatch (layout/backend/x-blocking) moved to
+``repro.sparse.ops_builtin``; construction moved to
+``repro.sparse.SparseTensor.from_csr``. These wrappers keep the historical
+signatures working and delegate (DESIGN.md §8 migration table):
+
+    prepare / prepare_sell / prepare_with_schedule
+        -> SparseTensor.from_csr(csr, schedule=...) (.build_container for
+           the bare host container these shims still return)
+    bsr_spmv(a, x) / bsr_spmm(a, X)
+        -> plan("spmv"/"spmm", (a,)).execute(x)
+    bsr_spmv_scheduled(csr, x, sched)
+        -> plan("spmv"/"spmm", (csr,), schedule=sched).execute(x)
+
+The oracle helpers and device-array exporters remain here for tests.
 """
 from __future__ import annotations
 
@@ -16,12 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.autotune import SELL_SIGMA, Schedule
-from ...core.csr import CSR, BSR, ELLBSR, SELLBSR, ell_block_cap
-from ..common import resolve_backend
-from .kernel import (bsr_spmm_pallas, bsr_spmm_sell_pallas, bsr_spmv_pallas,
-                     bsr_spmv_sell_pallas)
-from .ref import (ref_bsr_spmm, ref_bsr_spmm_sell, ref_bsr_spmv,
-                  ref_bsr_spmv_sell)
+from ...core.csr import CSR, ELLBSR, SELLBSR
 
 SparseLayout = Union[ELLBSR, SELLBSR]
 
@@ -44,129 +47,59 @@ def sell_device_arrays(sell: SELLBSR
 
 
 def prepare(csr: CSR, block_size: int = 128, max_blocks: int | None = None) -> ELLBSR:
-    return ELLBSR.from_bsr(BSR.from_csr(csr, block_size), max_blocks)
+    """.. deprecated:: use ``SparseTensor.from_csr`` (returns the device
+    pytree; this shim returns the bare host container)."""
+    from ...sparse import SparseTensor
+    return SparseTensor.build_container(
+        csr, Schedule("bsr", block_size, 1.0), max_blocks=max_blocks)
 
 
 def prepare_sell(csr: CSR, block_size: int = 128, slice_height: int = 8,
                  sigma: int = 64) -> SELLBSR:
-    return SELLBSR.from_bsr(BSR.from_csr(csr, block_size), slice_height, sigma)
+    """.. deprecated:: use ``SparseTensor.from_csr(..., layout="sell")``."""
+    from ...sparse import SparseTensor
+    return SparseTensor.build_container(
+        csr, Schedule("bsr", block_size, 1.0, layout="sell",
+                      slice_height=slice_height), sigma=sigma)
 
 
 def prepare_with_schedule(csr: CSR, sched: Schedule,
                           sigma: int = SELL_SIGMA) -> SparseLayout:
-    """Build the container a pre-selected autotune/selector ``Schedule``
-    names: the glue between the selection service and the kernels."""
+    """.. deprecated:: use ``SparseTensor.from_csr(csr, schedule=sched)``."""
     if sched.backend == "dense":
         raise ValueError("dense schedules have no sparse container; "
                          "dispatch to a dense matmul instead")
-    if sched.layout == "sell":
-        return prepare_sell(csr, sched.block_size,
-                            max(sched.slice_height, 1), sigma)
-    bsr = BSR.from_csr(csr, sched.block_size)
-    return ELLBSR.from_bsr(bsr, ell_block_cap(bsr.blocks_per_row(),
-                                              sched.ell_quantile))
+    from ...sparse import SparseTensor
+    return SparseTensor.build_container(csr, sched, sigma=sigma)
 
 
 def bsr_spmv_scheduled(csr: CSR, x: jax.Array, sched: Schedule,
                        backend: str = "auto") -> jax.Array:
-    """y = A @ x (or Y = A @ X when x is 2-D) under a pre-selected
-    ``Schedule``: prep + layout dispatch + backend in one call, so serving
-    code routes a (matrix, schedule) pair straight to the kernels."""
+    """.. deprecated:: use ``plan("spmv", (csr,), schedule=sched)``."""
+    from ...sparse import plan
     x = jnp.asarray(x)
-    if sched.backend == "dense":
-        dense = jnp.asarray(csr.to_dense())
-        return dense @ x.astype(jnp.float32)
-    a = prepare_with_schedule(csr, sched)
-    if x.ndim == 2:
-        return bsr_spmm(a, x, backend=backend)
-    return bsr_spmv(a, x, backend=backend)
-
-
-def _x_blocked(a: SparseLayout, x: jax.Array) -> jax.Array:
-    """Pad the dense vector to the block grid and reshape to (n_bc, bs)."""
-    bs = a.block_size
-    n_bc = -(-a.shape[1] // bs)
-    x_pad = jnp.zeros((n_bc * bs,), jnp.float32).at[: a.shape[1]].set(
-        x.astype(jnp.float32))
-    return x_pad.reshape(n_bc, bs)
-
-
-def _rhs_blocked(a: SparseLayout, X: jax.Array, rhs_tile: int) -> jax.Array:
-    """Pad the dense RHS to the block grid / RHS tile: (n_bc, bs, k_pad)."""
-    bs = a.block_size
-    n_bc = -(-a.shape[1] // bs)
-    k = X.shape[1]
-    k_pad = -(-k // rhs_tile) * rhs_tile
-    X_pad = jnp.zeros((n_bc * bs, k_pad), jnp.float32)
-    X_pad = X_pad.at[: a.shape[1], :k].set(X.astype(jnp.float32))
-    return X_pad.reshape(n_bc, bs, k_pad)
-
-
-def _scatter_rows(sell: SELLBSR, y_sorted: jax.Array) -> jax.Array:
-    """Undo the SELL row sort: sorted position i holds original block-row
-    ``row_perm[i]``."""
-    perm = jnp.asarray(sell.row_perm, jnp.int32)
-    return jnp.zeros_like(y_sorted).at[perm].set(y_sorted)
+    op = "spmm" if x.ndim == 2 else "spmv"
+    return plan(op, (csr,), schedule=sched, backend=backend).execute(x)
 
 
 def bsr_spmv(a: SparseLayout, x: jax.Array, backend: str = "auto") -> jax.Array:
-    """y = A @ x for A in ELL-BSR or SELL-BSR form; x is the dense
-    (n_cols,) vector.
+    """y = A @ x for a prepared ELL/SELL container.
 
-    Returns a dense (n_rows,) vector (unpadded).
+    .. deprecated:: use ``plan("spmv", (a,))`` — this shim delegates there.
     """
-    backend = resolve_backend(backend)
-    x_blocks = _x_blocked(a, x)
-    if isinstance(a, SELLBSR):
-        idx, cols, rows, blocks = sell_device_arrays(a)
-        n_br = a.n_block_rows
-        if backend == "jnp":
-            y = ref_bsr_spmv_sell(idx, cols, rows, blocks, x_blocks, n_br)
-        else:
-            y = bsr_spmv_sell_pallas(idx, cols, rows, blocks, x_blocks, n_br,
-                                     interpret=(backend == "interpret"))
-        y = _scatter_rows(a, y)
-    else:
-        idx, cols, blocks, _ = ell_device_arrays(a)
-        if backend == "jnp":
-            y = ref_bsr_spmv(idx, cols, blocks, x_blocks)
-        else:
-            y = bsr_spmv_pallas(idx, cols, blocks, x_blocks,
-                                interpret=(backend == "interpret"))
-    return y.reshape(-1)[: a.shape[0]]
+    from ...sparse import plan
+    return plan("spmv", (a,), backend=backend).execute(x)
 
 
 def bsr_spmm(a: SparseLayout, X: jax.Array, backend: str = "auto",
              rhs_tile: int | None = None) -> jax.Array:
-    """Y = A @ X for A in ELL-BSR or SELL-BSR form; X is dense (n_cols, k).
+    """Y = A @ X for a prepared ELL/SELL container (multi-RHS).
 
-    The k axis is padded up to ``rhs_tile`` (lane-aligned: 128 for the
-    compiled Pallas path, 8 otherwise) so one A-block DMA feeds a
-    (bs, bs) @ (bs, k) MXU op — A traffic amortized across the RHS width.
-    Returns dense (n_rows, k) (unpadded).
+    .. deprecated:: use ``plan("spmm", (a,))`` — this shim delegates there.
     """
-    backend = resolve_backend(backend)
-    if rhs_tile is None:
-        rhs_tile = 128 if backend == "pallas" else 8
-    k = X.shape[1]
-    x_blocks = _rhs_blocked(a, X, rhs_tile)
-    if isinstance(a, SELLBSR):
-        idx, cols, rows, blocks = sell_device_arrays(a)
-        n_br = a.n_block_rows
-        if backend == "jnp":
-            y = ref_bsr_spmm_sell(idx, cols, rows, blocks, x_blocks, n_br)
-        else:
-            y = bsr_spmm_sell_pallas(idx, cols, rows, blocks, x_blocks, n_br,
-                                     interpret=(backend == "interpret"))
-        y = _scatter_rows(a, y)
-    else:
-        idx, cols, blocks, _ = ell_device_arrays(a)
-        if backend == "jnp":
-            y = ref_bsr_spmm(idx, cols, blocks, x_blocks)
-        else:
-            y = bsr_spmm_pallas(idx, cols, blocks, x_blocks,
-                                interpret=(backend == "interpret"))
-    return y.reshape(y.shape[0] * y.shape[1], -1)[: a.shape[0], :k]
+    from ...sparse import plan
+    return plan("spmm", (a,), backend=backend,
+                rhs_tile=rhs_tile).execute(X)
 
 
 def spmv_oracle(csr: CSR, x: np.ndarray) -> np.ndarray:

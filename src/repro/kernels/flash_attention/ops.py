@@ -3,18 +3,13 @@ from __future__ import annotations
 
 import jax
 
-from ..common import resolve_backend
-from .kernel import flash_attention_pallas
-from .ref import ref_attention
-
-
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, block_q: int = 128,
                     block_k: int = 128, backend: str = "auto") -> jax.Array:
-    """(BH, S, D) attention; see kernel.py for the TPU schedule."""
-    backend = resolve_backend(backend)
-    if backend == "jnp":
-        return ref_attention(q, k, v, causal=causal)
-    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k,
-                                  interpret=(backend == "interpret"))
+    """(BH, S, D) attention; see kernel.py for the TPU schedule.
+
+    .. deprecated:: use ``plan("flash_attention", (), causal=...)`` — this
+    shim delegates there (DESIGN.md §8)."""
+    from ...sparse import plan
+    return plan("flash_attention", (), backend=backend, causal=causal,
+                block_q=block_q, block_k=block_k).execute(q, k, v)

@@ -4,13 +4,7 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-
-from ..common import resolve_backend
-from .kernel import moe_gmm_pallas
-from .ref import ref_gmm
-
 
 def route_and_pad(tokens: np.ndarray, expert_of_token: np.ndarray, n_experts: int,
                   tile_m: int = 128) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -41,8 +35,8 @@ def route_and_pad(tokens: np.ndarray, expert_of_token: np.ndarray, n_experts: in
 def moe_gmm(tile_expert: jax.Array, x: jax.Array, w: jax.Array,
             tile_m: int = 128, tile_n: int = 128, tile_k: int = 128,
             backend: str = "auto") -> jax.Array:
-    backend = resolve_backend(backend)
-    if backend == "jnp":
-        return ref_gmm(tile_expert, x, w, tile_m=tile_m)
-    return moe_gmm_pallas(tile_expert, x, w, tile_m=tile_m, tile_n=tile_n,
-                          tile_k=tile_k, interpret=(backend == "interpret"))
+    """.. deprecated:: use ``plan("moe_gmm", (tile_expert,), tile_m=...)`` —
+    this shim delegates there (DESIGN.md §8)."""
+    from ...sparse import plan
+    return plan("moe_gmm", (tile_expert,), backend=backend, tile_m=tile_m,
+                tile_n=tile_n, tile_k=tile_k).execute(x, w)

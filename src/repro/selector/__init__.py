@@ -9,12 +9,13 @@ Turns the offline characterization loop into a serving subsystem:
                    (service.py); CLI entry: ``python -m repro.selector.serve``
 """
 from .cache import ScheduleCache, schedule_from_dict, schedule_to_dict
-from .fingerprint import FP_PRECISION, Fingerprint, fingerprint
+from .fingerprint import (FP_PRECISION, Fingerprint, fingerprint,
+                          routing_fingerprint)
 from .predictor import Prediction, SchedulePredictor, retraining_row
 from .service import Decision, Request, SelectorService
 
 __all__ = [
-    "FP_PRECISION", "Fingerprint", "fingerprint",
+    "FP_PRECISION", "Fingerprint", "fingerprint", "routing_fingerprint",
     "Prediction", "SchedulePredictor", "retraining_row",
     "ScheduleCache", "schedule_from_dict", "schedule_to_dict",
     "Decision", "Request", "SelectorService",

@@ -58,3 +58,34 @@ def fingerprint(csr: CSR, precision: int = FP_PRECISION) -> Fingerprint:
     return Fingerprint(key=key, canonical=canonical, features=dict(feats),
                        shape=(int(csr.shape[0]), int(csr.shape[1])),
                        nnz=int(csr.nnz))
+
+
+def routing_fingerprint(tokens_per_expert, d_model: int, platform: str = "",
+                        precision: int = FP_PRECISION) -> Fingerprint:
+    """Fingerprint of an MoE routing histogram for the serving decode cache.
+
+    Tokens-per-expert is the paper's nnz-per-row partition problem
+    (models/moe.py), so the decode-time grouped-GEMM tile choice caches the
+    same way a matrix's schedule does: Eq. 5 imbalance + size features,
+    rounded and hashed. Used by ``repro.sparse.moe_tile_schedule``.
+    """
+    import numpy as np
+    counts = np.asarray(tokens_per_expert, np.float64).reshape(-1)
+    n_e = int(counts.size)
+    total = float(counts.sum())
+    feats = {
+        "moe_imbalance": metrics_mod.partition_imbalance(counts, max(n_e, 1)),
+        "moe_log_tokens": float(np.log10(total + 1.0)),
+        "moe_n_experts": float(n_e),
+        "moe_d_model": float(d_model),
+        "moe_top_share": float(counts.max() / total) if total > 0 else 0.0,
+    }
+    canonical = tuple(sorted((k, _canon(v, precision))
+                             for k, v in feats.items()))
+    # The tile rule is platform-specific, so the platform is part of the
+    # key: a shared cache must never serve one platform's tile to another.
+    payload = "|".join([f"moe1;experts={n_e};d={int(d_model)};p={platform}"]
+                       + [f"{k}={t}" for k, t in canonical])
+    key = hashlib.sha1(payload.encode("utf-8")).hexdigest()
+    return Fingerprint(key=key, canonical=canonical, features=feats,
+                       shape=(n_e, int(d_model)), nnz=int(total))

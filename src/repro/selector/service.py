@@ -17,7 +17,10 @@ Batching: requests drained per ``process_pending`` call are bucketed by the
 selected schedule, because the schedule *is* the Pallas compile key —
 matrices in one bucket share one compiled kernel (same layout / block size /
 slice height / RHS tile), so the bucket count, not the request count, is the
-number of kernel programs a serving tick pays for.
+number of kernel programs a serving tick pays for. Since the facade landed
+(DESIGN.md §8) a bucket also shares the *launch*: members executing in one
+tick go through ``repro.sparse.plan_bucket`` — one stacked jitted program
+for the whole bucket, not one dispatch per member.
 """
 from __future__ import annotations
 
@@ -77,12 +80,20 @@ class SelectorService:
         self.retraining_examples: List[Dict] = []
         self._counts = {"requests": 0, "cache_hits": 0, "tree_served": 0,
                         "verify_fallbacks": 0, "batches": 0, "buckets": 0,
-                        "executed": 0}
+                        "executed": 0, "stacked_launches": 0, "refits": 0}
         self._bucket_sizes: List[int] = []
 
     # ------------------------------------------------------------- ingress
     def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None) -> None:
         self.pending.append(Request(name, csr, x))
+
+    def select(self, csr: CSR, name: str = "plan") -> Decision:
+        """Single-request decision (fingerprint -> cache -> tree -> verify)
+        without batching; the schedule source behind
+        ``repro.sparse.plan(op, ..., selector=service)``."""
+        dec = self._decide(Request(name, csr), batch_id=-1)
+        self._counts["requests"] += 1
+        return dec
 
     # ------------------------------------------------------------ decisions
     def _verify(self, fp: Fingerprint, A: CSR) -> Tuple[Schedule, float]:
@@ -154,21 +165,59 @@ class SelectorService:
 
     def _execute_bucket(self, members: List[Tuple[Request, Decision]],
                         backend: str) -> None:
-        """Run SpMV/SpMM for the bucket members that carried an RHS.
+        """Run SpMV for the bucket members that carried an RHS — all of
+        them through ONE stacked jitted launch.
 
-        All members share one Schedule, hence one kernel program; the Pallas
-        compile cache is keyed by (schedule, padded shapes), so the bucket
-        amortizes compilation the way the paper's sweep amortized
-        characterization.
+        All members share one Schedule, hence one kernel program; since the
+        facade landed they also share the dispatch: ``plan_bucket`` pads the
+        members to common shapes, stacks them along a leading axis, and the
+        whole bucket executes as a single device program instead of one
+        launch per member.
         """
-        from ..kernels.bsr_spmv.ops import bsr_spmv_scheduled
-        for req, dec in members:
-            if req.x is None:
-                continue
-            dec.y = np.asarray(
-                bsr_spmv_scheduled(req.csr, req.x, dec.schedule,
-                                   backend=backend))
-            self._counts["executed"] += 1
+        from ..sparse import plan_bucket
+        todo = [(req, dec) for req, dec in members if req.x is not None]
+        if not todo:
+            return
+        # One stacked launch per RHS signature: members may mix vector and
+        # multi-RHS (or different-k) inputs under one schedule; each
+        # homogeneous group still shares a single dispatch.
+        groups: "Dict[Tuple, List[Tuple[Request, Decision]]]" = {}
+        for req, dec in todo:
+            x = np.asarray(req.x)
+            groups.setdefault((x.ndim,) + x.shape[1:], []).append((req, dec))
+        for grp in groups.values():
+            bucket_plan = plan_bucket("spmv", [req.csr for req, _ in grp],
+                                      grp[0][1].schedule, backend=backend)
+            ys = bucket_plan.execute([req.x for req, _ in grp])
+            self._counts["stacked_launches"] += 1
+            for (req, dec), y in zip(grp, ys):
+                dec.y = np.asarray(y)
+                self._counts["executed"] += 1
+
+    # ----------------------------------------------------------- retraining
+    def refit(self, min_examples: int = 8) -> Dict[str, float]:
+        """Refresh the tuner tree from the verify-fallback feedback buffer
+        (ROADMAP follow-up). Explicit call, no background thread: serving
+        code decides when a retrain tick is affordable.
+
+        Consumes ``retraining_examples`` once at least ``min_examples`` have
+        accumulated; rows are already in the (static metrics + cfg) feature
+        space ``ScheduleTuner.fit`` trains on, so no simulation re-runs.
+        Returns telemetry: ``refit`` (0/1), ``examples`` consumed/pending.
+        """
+        n = len(self.retraining_examples)
+        if n < max(int(min_examples), 1):
+            return {"refit": 0.0, "examples": float(n)}
+        n_static = len(self.tuner.feature_names) - len(
+            self.retraining_examples[0]["cfg"])
+        rows = [[ex["features"][k]
+                 for k in self.tuner.feature_names[:n_static]] + list(ex["cfg"])
+                for ex in self.retraining_examples]
+        ys = [ex["log10_time_s"] for ex in self.retraining_examples]
+        self.tuner.refit(rows, ys)
+        self.retraining_examples.clear()
+        self._counts["refits"] += 1
+        return {"refit": 1.0, "examples": float(n)}
 
     # ------------------------------------------------------------ telemetry
     def telemetry(self) -> Dict[str, float]:

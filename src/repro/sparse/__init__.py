@@ -1,0 +1,31 @@
+"""Unified plan/execute sparse-op facade (DESIGN.md §8).
+
+The single front door to every sparse kernel:
+
+    from repro.sparse import SparseTensor, plan, plan_bucket
+
+    st = SparseTensor.from_csr(csr, schedule=sched)     # subsumes prepare*
+    y  = plan("spmv", (csr,), selector=service).execute(x)
+    C  = plan("spgemm", (a, b), schedule=sched).execute()
+    ys = plan_bucket("spmv", csrs, sched).execute(xs)   # ONE stacked launch
+
+``SparseTensor`` is a pytree-registered device container (jit/vmap/donation
+safe); ``plan`` resolves a Schedule explicitly, through a fitted
+``ScheduleTuner``, or through the online ``SelectorService``; ``Plan``
+carries the resolved schedule, selection provenance, and a jitted launch.
+The op registry (``register_op``) covers spmv/spmm/spgemm/spadd/moe_gmm/
+flash_attention; legacy per-kernel entry points delegate here.
+"""
+from . import ops_builtin  # noqa: F401  (registers the built-in ops)
+from .ops_builtin import moe_tile_schedule, route_and_pad
+from .plan import (Plan, launch_count, plan, plan_bucket, reset_counters,
+                   trace_count)
+from .registry import OpSpec, get_op, list_ops, register_op
+from .tensor import LAYOUT_FIELDS, SparseMeta, SparseTensor
+
+__all__ = [
+    "LAYOUT_FIELDS", "OpSpec", "Plan", "SparseMeta", "SparseTensor",
+    "get_op", "launch_count", "list_ops", "moe_tile_schedule", "plan",
+    "plan_bucket", "register_op", "reset_counters", "route_and_pad",
+    "trace_count",
+]

@@ -1,0 +1,554 @@
+"""Built-in op registrations of the plan/execute facade (DESIGN.md §8).
+
+Registered ops: ``spmv`` / ``spmm`` / ``spgemm`` / ``spadd`` / ``moe_gmm`` /
+``flash_attention``. Each planner resolves operands into device pytrees
+(``SparseTensor``) once, then hands back a ``Plan`` whose launch is a
+module-level jitted executor — module-level so the XLA compile cache is
+shared across every plan with the same (schedule, backend, shapes), which
+is exactly the schedule-bucket compile-key property the selector batches
+around.
+
+``spmv``/``spmm`` also register bucket planners: a whole same-schedule
+bucket is padded to common shapes, stacked along a leading axis, and run as
+ONE vmapped jitted launch. The executors bump ``plan.trace_count`` when a
+program actually retraces, so tests can assert a bucket compiles once and
+launches once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.autotune import SELL_SIGMA, Schedule, select_moe_block_size
+from ..core.csr import BSR, CSR, ELLBSR, SELLBSR
+from ..kernels.bsr_spadd.kernel import bsr_spadd_pallas
+from ..kernels.bsr_spadd.ops import spadd_symbolic
+from ..kernels.bsr_spadd.ref import ref_block_union_add
+from ..kernels.bsr_spgemm.kernel import (bsr_spgemm_cells_pallas,
+                                         bsr_spgemm_pallas)
+from ..kernels.bsr_spgemm.ops import spgemm_symbolic, spgemm_symbolic_cells
+from ..kernels.bsr_spgemm.ref import ref_cell_gemm, ref_pair_gemm
+from ..kernels.bsr_spmv.kernel import (bsr_spmm_pallas, bsr_spmm_sell_pallas,
+                                       bsr_spmv_pallas, bsr_spmv_sell_pallas)
+from ..kernels.bsr_spmv.ref import (ref_bsr_spmm, ref_bsr_spmm_sell,
+                                    ref_bsr_spmv, ref_bsr_spmv_sell)
+from ..kernels.flash_attention.kernel import flash_attention_pallas
+from ..kernels.flash_attention.ref import ref_attention
+from ..kernels.moe_gmm.kernel import moe_gmm_pallas
+from ..kernels.moe_gmm.ops import route_and_pad  # noqa: F401  (facade re-export)
+from ..kernels.moe_gmm.ref import ref_gmm
+from .plan import Plan, _bump_trace
+from .registry import register_op
+from .tensor import SparseTensor
+
+MATVEC_LAYOUTS = ("ell", "sell", "dense")
+
+
+# ---------------------------------------------------------------------------
+# spmv / spmm — single-operand executor
+# ---------------------------------------------------------------------------
+
+def _block_x(x: jax.Array, n_cols: int, n_bc: int, bs: int,
+             rhs_tile: int) -> jax.Array:
+    """Pad the dense RHS to the block grid: (n_bc, bs) or (n_bc, bs, k_pad)."""
+    x = x.astype(jnp.float32)
+    if x.ndim == 2:
+        k = x.shape[1]
+        k_pad = -(-k // rhs_tile) * rhs_tile
+        xb = jnp.zeros((n_bc * bs, k_pad), jnp.float32)
+        return xb.at[:n_cols, :k].set(x).reshape(n_bc, bs, k_pad)
+    xb = jnp.zeros((n_bc * bs,), jnp.float32)
+    return xb.at[:n_cols].set(x).reshape(n_bc, bs)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "rhs_tile"))
+def _exec_matvec(st: SparseTensor, x: jax.Array, backend: str,
+                 rhs_tile: int) -> jax.Array:
+    """y = A @ x (or Y = A @ X for 2-D x) for an ell/sell/dense operand."""
+    _bump_trace("matvec")
+    meta = st.meta
+    if meta.layout == "dense":
+        return st.arrays["dense"] @ x.astype(jnp.float32)
+    bs = meta.block_size
+    n_bc = -(-meta.shape[1] // bs)
+    multi = x.ndim == 2
+    xb = _block_x(x, meta.shape[1], n_bc, bs, rhs_tile)
+    if meta.layout == "sell":
+        cb, cc, cr = (st.arrays["cell_block"], st.arrays["cell_col"],
+                      st.arrays["cell_row"])
+        blocks = st.arrays["blocks"]
+        n_br = meta.n_block_rows
+        if backend == "jnp":
+            y = (ref_bsr_spmm_sell if multi else ref_bsr_spmv_sell)(
+                cb, cc, cr, blocks, xb, n_br)
+        else:
+            y = (bsr_spmm_sell_pallas if multi else bsr_spmv_sell_pallas)(
+                cb, cc, cr, blocks, xb, n_br,
+                interpret=(backend == "interpret"))
+        perm = st.arrays["row_perm"]
+        y = jnp.zeros_like(y).at[perm].set(y)
+    elif meta.layout == "ell":
+        idx, cols = st.arrays["block_indices"], st.arrays["block_cols"]
+        blocks = st.arrays["blocks"]
+        if backend == "jnp":
+            y = (ref_bsr_spmm if multi else ref_bsr_spmv)(idx, cols, blocks, xb)
+        else:
+            y = (bsr_spmm_pallas if multi else bsr_spmv_pallas)(
+                idx, cols, blocks, xb, interpret=(backend == "interpret"))
+    else:
+        raise ValueError(f"spmv/spmm cannot execute layout {meta.layout!r}")
+    if multi:
+        k = x.shape[1]
+        return y.reshape(y.shape[0] * y.shape[1], -1)[: meta.shape[0], :k]
+    return y.reshape(-1)[: meta.shape[0]]
+
+
+def _plan_matvec(operands, schedule: Optional[Schedule], backend: str, *,
+                 op: str, rhs_tile: Optional[int] = None,
+                 block_size: int = 128, layout: str = "ell",
+                 slice_height: int = 8, sigma: int = SELL_SIGMA,
+                 max_blocks: Optional[int] = None, **_) -> Plan:
+    (a,) = operands
+    if isinstance(a, CSR):
+        st = SparseTensor.from_csr(a, schedule=schedule, block_size=block_size,
+                                   layout=None if layout == "ell" else layout,
+                                   slice_height=slice_height, sigma=sigma,
+                                   max_blocks=max_blocks)
+    else:
+        st = SparseTensor.wrap(a, schedule)
+    if st.layout not in MATVEC_LAYOUTS:
+        raise ValueError(f"{op} needs an ell/sell/dense operand, got a "
+                         f"{st.layout!r} SparseTensor")
+    sched = schedule if schedule is not None else st.meta.schedule
+    tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
+                                                  else 8)
+
+    def run(x):
+        return _exec_matvec(st, jnp.asarray(x), backend=backend,
+                            rhs_tile=tile)
+
+    return Plan(op=op, schedule=sched, backend=backend, _run=run,
+                operands=(st,))
+
+
+# ---------------------------------------------------------------------------
+# spmv / spmm — stacked bucket launch
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("layout", "backend"))
+def _exec_matvec_stacked(arrays, xs: jax.Array, layout: str,
+                         backend: str) -> jax.Array:
+    """One launch for a whole same-schedule bucket: member axis leading.
+
+    ``xs`` is (B, n_bc*bs) or (B, n_bc*bs, k); returns (B, n_br*bs[, k]).
+    One jitted program, one dispatch, every member in flight: the jnp
+    backend vmaps the fused formulation over the member axis; the
+    interpret/pallas backends run the per-member kernel schedule unrolled
+    inside the same program (padding made the member shapes identical).
+    """
+    _bump_trace("matvec_stacked")
+    multi = xs.ndim == 3
+    if layout == "dense":
+        dense = arrays["dense"]
+        eq = "bij,bjk->bik" if multi else "bij,bj->bi"
+        return jnp.einsum(eq, dense, xs.astype(jnp.float32))
+    bs = arrays["blocks"].shape[-1]
+    n_bc = xs.shape[1] // bs
+    xb = (xs.reshape(xs.shape[0], n_bc, bs, xs.shape[-1]) if multi
+          else xs.reshape(xs.shape[0], n_bc, bs))
+    interpret = backend == "interpret"
+    if layout == "ell":
+        if backend == "jnp":
+            def one(idx, cols, blocks, x1):
+                eq = "rmab,rmbk->rak" if multi else "rmab,rmb->ra"
+                return jnp.einsum(eq, blocks[idx], x1[cols])
+            y = jax.vmap(one)(arrays["block_indices"], arrays["block_cols"],
+                              arrays["blocks"], xb)
+        else:
+            kern = bsr_spmm_pallas if multi else bsr_spmv_pallas
+            y = jnp.stack([
+                kern(arrays["block_indices"][b], arrays["block_cols"][b],
+                     arrays["blocks"][b], xb[b], interpret=interpret)
+                for b in range(xb.shape[0])])
+    else:  # sell
+        n_br = arrays["row_perm"].shape[1]
+        if backend == "jnp":
+            def one(cb, cc, cr, blocks, perm, x1):
+                eq = "tab,tbk->tak" if multi else "tab,tb->ta"
+                prods = jnp.einsum(eq, blocks[cb], x1[cc])
+                ys = jax.ops.segment_sum(prods, cr, num_segments=n_br)
+                return jnp.zeros_like(ys).at[perm].set(ys)
+            y = jax.vmap(one)(arrays["cell_block"], arrays["cell_col"],
+                              arrays["cell_row"], arrays["blocks"],
+                              arrays["row_perm"], xb)
+        else:
+            kern = bsr_spmm_sell_pallas if multi else bsr_spmv_sell_pallas
+            outs = []
+            for b in range(xb.shape[0]):
+                ys = kern(arrays["cell_block"][b], arrays["cell_col"][b],
+                          arrays["cell_row"][b], arrays["blocks"][b], xb[b],
+                          n_br, interpret=interpret)
+                outs.append(jnp.zeros_like(ys).at[arrays["row_perm"][b]]
+                            .set(ys))
+            y = jnp.stack(outs)
+    if multi:
+        return y.reshape(y.shape[0], y.shape[1] * y.shape[2], y.shape[3])
+    return y.reshape(y.shape[0], -1)
+
+
+def _stack_pad(mats: Sequence[np.ndarray], fill) -> np.ndarray:
+    """Stack host arrays along a new axis 0, padding each to the common max
+    shape with ``fill`` (scalar or per-member list)."""
+    shape = tuple(max(m.shape[d] for m in mats) for d in range(mats[0].ndim))
+    fills = fill if isinstance(fill, (list, tuple)) else [fill] * len(mats)
+    out = np.stack([np.full(shape, f, dtype=mats[0].dtype)
+                    for f in fills])
+    for i, m in enumerate(mats):
+        out[(i,) + tuple(slice(0, s) for s in m.shape)] = m
+    return out
+
+
+def _bucket_hosts(members: List, schedule: Schedule, sigma: int) -> List:
+    """Per-member host containers WITHOUT device staging — the stacked
+    launch uploads only the padded stacks, so staging each member's own
+    arrays too would double the host->device traffic."""
+    hosts = []
+    for m in members:
+        if isinstance(m, SparseTensor):
+            hosts.append(m.to_host())
+        elif isinstance(m, CSR):
+            hosts.append(SparseTensor.build_container(m, schedule,
+                                                      sigma=sigma))
+        else:
+            hosts.append(m)   # already an ELLBSR/SELLBSR/dense container
+    return hosts
+
+
+def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
+                        op: str = "spmv", rhs_tile: Optional[int] = None,
+                        sigma: int = SELL_SIGMA, **_) -> Plan:
+    hosts = _bucket_hosts(members, schedule, sigma)
+    kinds = {("dense" if isinstance(h, np.ndarray) else
+              "sell" if isinstance(h, SELLBSR) else "ell") for h in hosts}
+    if len(kinds) != 1:
+        raise ValueError(f"bucket mixes layouts {sorted(kinds)}; a bucket "
+                         "shares one Schedule by construction")
+    layout = kinds.pop()
+    shapes = [h.shape for h in hosts]
+    tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
+                                                  else 8)
+    if layout == "dense":
+        arrays = {"dense": jnp.asarray(_stack_pad(
+            [np.asarray(h, np.float32) for h in hosts], 0.0))}
+        bs = schedule.block_size
+    else:
+        bs = hosts[0].block_size
+        # Per-member pad slots must keep pointing at that member's own
+        # all-zeros block (its index differs member to member).
+        zero_idx = [h.blocks.shape[0] - 1 for h in hosts]
+        if layout == "ell":
+            arrays = {
+                "block_indices": jnp.asarray(_stack_pad(
+                    [h.block_indices for h in hosts], zero_idx)),
+                "block_cols": jnp.asarray(_stack_pad(
+                    [h.block_cols for h in hosts], 0)),
+                "blocks": jnp.asarray(_stack_pad(
+                    [h.blocks.astype(np.float32) for h in hosts], 0.0)),
+            }
+        else:
+            n_br = max(h.n_block_rows for h in hosts)
+            arrays = {
+                "cell_block": jnp.asarray(_stack_pad(
+                    [h.cell_block for h in hosts], zero_idx)),
+                "cell_col": jnp.asarray(_stack_pad(
+                    [h.cell_col for h in hosts], 0)),
+                # pad cells extend the member's LAST sorted row (+0 from the
+                # zero block), keeping cell_row nondecreasing — the Pallas
+                # output-residency contract; padding with row 0 would
+                # re-initialize (and zero) row 0's accumulated tile.
+                "cell_row": jnp.asarray(_stack_pad(
+                    [h.cell_row for h in hosts],
+                    [int(h.cell_row[-1]) if h.cell_row.size else 0
+                     for h in hosts])),
+                # identity-extend each member's permutation so padded sorted
+                # rows scatter onto padded (sliced-away) output rows
+                "row_perm": jnp.asarray(np.stack([
+                    np.concatenate([h.row_perm,
+                                    np.arange(h.n_block_rows, n_br,
+                                              dtype=np.int32)])
+                    for h in hosts])),
+                "blocks": jnp.asarray(_stack_pad(
+                    [h.blocks.astype(np.float32) for h in hosts], 0.0)),
+            }
+
+    n_cols_max = max(s[1] for s in shapes)
+    n_bc = -(-n_cols_max // bs) if layout != "dense" else None
+
+    def run(xs):
+        if len(xs) != len(hosts):
+            raise ValueError(f"bucket has {len(hosts)} members, got "
+                             f"{len(xs)} runtime inputs")
+        xs = [np.asarray(x, np.float32) for x in xs]
+        sigs = {(x.ndim,) + x.shape[1:] for x in xs}
+        if len(sigs) != 1:
+            raise ValueError(
+                "stacked launch needs homogeneous runtime inputs, got "
+                f"{sorted(sigs)}; split the bucket by RHS signature "
+                "(SelectorService does this automatically)")
+        multi = xs[0].ndim == 2
+        if layout == "dense":
+            width = arrays["dense"].shape[2]
+        else:
+            width = n_bc * bs
+        if multi:
+            k = xs[0].shape[1]
+            k_pad = -(-k // tile) * tile
+            xpad = np.zeros((len(xs), width, k_pad), np.float32)
+            for i, x in enumerate(xs):
+                xpad[i, : x.shape[0], :k] = x
+        else:
+            xpad = np.zeros((len(xs), width), np.float32)
+            for i, x in enumerate(xs):
+                xpad[i, : x.shape[0]] = x
+        ys = _exec_matvec_stacked(arrays, jnp.asarray(xpad), layout=layout,
+                                  backend=backend)
+        if multi:
+            return [ys[i, : shapes[i][0], : xs[i].shape[1]]
+                    for i in range(len(xs))]
+        return [ys[i, : shapes[i][0]] for i in range(len(xs))]
+
+    return Plan(op=op, schedule=schedule, backend=backend, _run=run,
+                operands=tuple(hosts), n_members=len(hosts))
+
+
+# ---------------------------------------------------------------------------
+# spgemm — padded pairs ("ell") or flattened cells ("sell" layout axis)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exec_spgemm_pairs(pair_a, pair_b, a_blocks, b_blocks, backend: str):
+    _bump_trace("spgemm_pairs")
+    if backend == "jnp":
+        return ref_pair_gemm(pair_a, pair_b, a_blocks, b_blocks)
+    return bsr_spgemm_pallas(pair_a, pair_b, a_blocks, b_blocks,
+                             interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("n_c", "backend"))
+def _exec_spgemm_cells(cell_a, cell_b, cell_c, a_blocks, b_blocks, n_c: int,
+                       backend: str):
+    _bump_trace("spgemm_cells")
+    if backend == "jnp":
+        return ref_cell_gemm(cell_a, cell_b, cell_c, a_blocks, b_blocks, n_c)
+    return bsr_spgemm_cells_pallas(cell_a, cell_b, cell_c, a_blocks, b_blocks,
+                                   n_c, interpret=(backend == "interpret"))
+
+
+def _with_zero_block(blocks: np.ndarray, bs: int) -> jax.Array:
+    return jnp.asarray(np.concatenate(
+        [blocks.astype(np.float32), np.zeros((1, bs, bs), np.float32)]))
+
+
+def _plan_spgemm(operands, schedule: Optional[Schedule], backend: str, *,
+                 block_size: int = 128, **_) -> Plan:
+    a, b = operands
+    if schedule is None:
+        schedule = Schedule("bsr", block_size, 1.0)
+    if schedule.backend == "dense":
+        raise ValueError("dense schedules have no BSR path; dispatch a "
+                         "dense matmul instead")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"inner dims mismatch {a.shape} @ {b.shape}")
+    bs = schedule.block_size
+    bsr_a, bsr_b = BSR.from_csr(a, bs), BSR.from_csr(b, bs)
+    out_shape = (a.shape[0], b.shape[1])
+
+    if schedule.layout == "sell":
+        c_ptrs, c_cols, ca, cb, cc = spgemm_symbolic_cells(bsr_a, bsr_b)
+        n_c = int(c_cols.size)
+        dev = (jnp.asarray(ca), jnp.asarray(cb), jnp.asarray(cc),
+               jnp.asarray(bsr_a.blocks, jnp.float32),
+               jnp.asarray(bsr_b.blocks, jnp.float32))
+
+        def run():
+            if n_c == 0:
+                c_blocks = np.zeros((0, bs, bs), np.float32)
+            else:
+                c_blocks = np.asarray(_exec_spgemm_cells(
+                    *dev, n_c=n_c, backend=backend))
+            return BSR(c_ptrs, c_cols, c_blocks, out_shape, bs)
+    else:
+        c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(bsr_a, bsr_b)
+        dev = (jnp.asarray(pair_a), jnp.asarray(pair_b),
+               _with_zero_block(bsr_a.blocks, bs),
+               _with_zero_block(bsr_b.blocks, bs))
+
+        def run():
+            if pair_a.shape[0] == 0:
+                c_blocks = np.zeros((0, bs, bs), np.float32)
+            else:
+                c_blocks = np.asarray(_exec_spgemm_pairs(
+                    *dev, backend=backend))
+            return BSR(c_ptrs, c_cols, c_blocks, out_shape, bs)
+
+    return Plan(op="spgemm", schedule=schedule, backend=backend, _run=run)
+
+
+# ---------------------------------------------------------------------------
+# spadd
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exec_spadd(ia, ib, a_blocks, b_blocks, backend: str):
+    _bump_trace("spadd")
+    if backend == "jnp":
+        return ref_block_union_add(ia, ib, a_blocks, b_blocks)
+    return bsr_spadd_pallas(ia, ib, a_blocks, b_blocks,
+                            interpret=(backend == "interpret"))
+
+
+def _plan_spadd(operands, schedule: Optional[Schedule], backend: str, *,
+                block_size: int = 128, **_) -> Plan:
+    a, b = operands
+    if schedule is None:
+        schedule = Schedule("bsr", block_size, 1.0)
+    if schedule.backend == "dense":
+        raise ValueError("dense schedules have no BSR path; dispatch a "
+                         "dense matmul instead")
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    bs = schedule.block_size
+    bsr_a, bsr_b = BSR.from_csr(a, bs), BSR.from_csr(b, bs)
+    c_ptrs, c_cols, ia, ib = spadd_symbolic(bsr_a, bsr_b)
+    dev = (jnp.asarray(ia), jnp.asarray(ib),
+           _with_zero_block(bsr_a.blocks, bs),
+           _with_zero_block(bsr_b.blocks, bs))
+
+    def run():
+        if ia.size == 0:
+            c_blocks = np.zeros((0, bs, bs), np.float32)
+        else:
+            c_blocks = np.asarray(_exec_spadd(*dev, backend=backend))
+        return BSR(c_ptrs, c_cols, c_blocks, a.shape, bs)
+
+    return Plan(op="spadd", schedule=schedule, backend=backend, _run=run)
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_m", "tile_n", "tile_k", "backend"))
+def _exec_moe(tile_expert, x, w, tile_m: int, tile_n: int, tile_k: int,
+              backend: str):
+    _bump_trace("moe_gmm")
+    if backend == "jnp":
+        return ref_gmm(tile_expert, x, w, tile_m=tile_m)
+    return moe_gmm_pallas(tile_expert, x, w, tile_m=tile_m, tile_n=tile_n,
+                          tile_k=tile_k, interpret=(backend == "interpret"))
+
+
+def _plan_moe(operands, schedule: Optional[Schedule], backend: str, *,
+              tile_m: Optional[int] = None, tile_n: int = 128,
+              tile_k: int = 128, **_) -> Plan:
+    (tile_expert,) = operands
+    tm = tile_m if tile_m is not None else (
+        schedule.block_size if schedule is not None else 128)
+    te = jnp.asarray(tile_expert, jnp.int32)
+
+    def run(x, w):
+        return _exec_moe(te, jnp.asarray(x), jnp.asarray(w), tile_m=tm,
+                         tile_n=tile_n, tile_k=tile_k, backend=backend)
+
+    return Plan(op="moe_gmm", schedule=schedule, backend=backend, _run=run,
+                operands=(te,))
+
+
+def moe_tile_schedule(tokens_per_expert, d_model: int, platform,
+                      cache=None) -> Schedule:
+    """Selector-backed MoE tile choice for the serving decode path.
+
+    The routing histogram is fingerprinted (``routing_fingerprint``) and
+    looked up in a ``ScheduleCache`` exactly like a sparse matrix: decode
+    ticks with recurring routing shapes hit the cache instead of re-running
+    the imbalance rule. The returned Schedule's ``block_size`` is the
+    grouped-GEMM ``tile_m`` (Eq. 5 imbalance rule on a miss).
+    """
+    from ..selector.fingerprint import routing_fingerprint
+    fp = None
+    if cache is not None:
+        if not cache.context:
+            cache.context = "moe_gmm"
+        fp = routing_fingerprint(tokens_per_expert, d_model, platform.name)
+        hit = cache.get(fp)
+        if hit is not None:
+            return hit
+    tile = select_moe_block_size(np.asarray(tokens_per_expert, np.float64),
+                                 d_model, platform)
+    sched = Schedule("bsr", tile, 1.0)
+    if cache is not None:
+        cache.put(fp, sched, "moe-rule")
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def _plan_flash(operands, schedule: Optional[Schedule], backend: str, *,
+                causal: bool = True, block_q: int = 128, block_k: int = 128,
+                **_) -> Plan:
+    if operands not in ((), None):
+        raise ValueError("flash_attention takes no planned operands; pass "
+                         "q, k, v to execute()")
+
+    def run(q, k, v):
+        if backend == "jnp":
+            return ref_attention(q, k, v, causal=causal)
+        return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                      block_k=block_k,
+                                      interpret=(backend == "interpret"))
+
+    return Plan(op="flash_attention", schedule=schedule, backend=backend,
+                _run=run)
+
+
+# ---------------------------------------------------------------------------
+# registrations
+# ---------------------------------------------------------------------------
+
+register_op(
+    "spmv", functools.partial(_plan_matvec, op="spmv"),
+    operand_spec="(A: CSR | SparseTensor | ELLBSR/SELLBSR) -> execute(x: (n,))",
+    layouts=MATVEC_LAYOUTS,
+    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmv"))
+register_op(
+    "spmm", functools.partial(_plan_matvec, op="spmm"),
+    operand_spec="(A: CSR | SparseTensor) -> execute(X: (n, k))",
+    layouts=MATVEC_LAYOUTS,
+    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmm"))
+register_op(
+    "spgemm", _plan_spgemm,
+    operand_spec="(A: CSR, B: CSR) -> execute() -> BSR",
+    layouts=("ell", "sell"), symbolic=spgemm_symbolic)
+# spadd accepts sell-layout schedules (tuner sweeps emit them; the modeled
+# spadd time ignores layout) but executes the block-union path either way —
+# only block_size is consumed, matching the legacy schedule= contract.
+register_op(
+    "spadd", _plan_spadd,
+    operand_spec="(A: CSR, B: CSR) -> execute() -> BSR",
+    layouts=("ell", "sell"), symbolic=spadd_symbolic)
+register_op(
+    "moe_gmm", _plan_moe,
+    operand_spec="(tile_expert: (M/tile_m,)) -> execute(x: (M, K), "
+                 "w: (E, K, N))",
+    layouts=("ell",))
+register_op(
+    "flash_attention", _plan_flash,
+    operand_spec="() -> execute(q, k, v: (BH, S, D))",
+    layouts=("ell",))

@@ -1,0 +1,160 @@
+"""plan/execute: the compile-style front door to every sparse kernel.
+
+``plan(op, operands, schedule=... | selector=...)`` resolves a ``Schedule``
+(explicitly, through a fitted ``ScheduleTuner``, or through the online
+``SelectorService`` cache/tree/verify path), runs the op's host-side prep +
+symbolic phase once, and returns a ``Plan`` — an executable carrying the
+resolved schedule, the selection provenance (source / fingerprint / modeled
+cost), and a jitted launch. ``plan_bucket`` builds ONE stacked jitted launch
+for a whole same-schedule bucket, closing the PR-2 follow-up where bucket
+members shared a compiled program but not the launch.
+
+Telemetry: module-level launch and trace counters. ``launch_count`` ticks
+once per ``Plan.execute`` (one device program dispatch); ``trace_count``
+ticks when a jitted executor actually retraces. A bucket of N matrices
+executed through one stacked plan bumps the launch counter once, not N
+times — the property the stacked-launch tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.autotune import Schedule
+from ..core.csr import CSR
+from ..kernels.common import resolve_backend
+from .registry import get_op
+
+_LAUNCHES: "Counter[str]" = Counter()
+_TRACES: "Counter[str]" = Counter()
+
+
+def _bump_launch(key: str) -> None:
+    _LAUNCHES[key] += 1
+
+
+def _bump_trace(key: str) -> None:
+    _TRACES[key] += 1
+
+
+def launch_count(op: Optional[str] = None) -> int:
+    """Number of ``Plan.execute`` device launches (per op, or total)."""
+    return _LAUNCHES[op] if op else sum(_LAUNCHES.values())
+
+
+def trace_count(key: Optional[str] = None) -> int:
+    """Number of executor retraces (per executor key, or total)."""
+    return _TRACES[key] if key else sum(_TRACES.values())
+
+
+def reset_counters() -> None:
+    _LAUNCHES.clear()
+    _TRACES.clear()
+
+
+@dataclasses.dataclass
+class Plan:
+    """An executable sparse-op launch with its selection provenance."""
+
+    op: str
+    schedule: Optional[Schedule]
+    backend: str
+    _run: Callable                      # jit-backed launch closure
+    operands: tuple = ()                # prepared device operands (pytrees)
+    source: str = "explicit"            # "explicit" | "tuner" | "selector-*"
+    fingerprint_key: str = ""
+    modeled_time_s: Optional[float] = None
+    confidence: Optional[float] = None
+    n_members: int = 1                  # >1 for stacked bucket plans
+
+    def execute(self, *runtime):
+        """Run the planned launch on the runtime inputs (one device program
+        dispatch — stacked plans execute their whole bucket here)."""
+        _bump_launch(self.op)
+        return self._run(*runtime)
+
+    __call__ = execute
+
+    def describe(self) -> str:
+        s = self.schedule
+        if s is None:
+            sched = "none"
+        elif s.backend == "dense":
+            sched = "dense"
+        else:
+            lay = (f"sell C={s.slice_height}" if s.layout == "sell"
+                   else f"ell q={s.ell_quantile}")
+            sched = f"{s.backend} bs={s.block_size} {lay} rhs={s.n_rhs}"
+        extra = f" members={self.n_members}" if self.n_members > 1 else ""
+        return f"plan[{self.op}] {sched} via {self.source}{extra}"
+
+
+def _resolve_with_selector(selector, A: CSR):
+    """Schedule + provenance from a SelectorService or a ScheduleTuner."""
+    if not isinstance(A, CSR):
+        raise TypeError("selector-based planning needs a CSR first operand, "
+                        f"got {type(A).__name__}")
+    if hasattr(selector, "process_pending"):      # SelectorService
+        dec = selector.select(A)
+        return dec.schedule, {
+            "source": f"selector-{dec.source}",
+            "fingerprint_key": dec.fingerprint_key,
+            "modeled_time_s": dec.modeled_time_s,
+            "confidence": dec.confidence,
+        }
+    if hasattr(selector, "select"):               # ScheduleTuner
+        schedule, info = selector.select(A)
+        return schedule, {
+            "source": "tuner",
+            "modeled_time_s": info.get("verified_time_s"),
+        }
+    raise TypeError(f"unsupported selector {type(selector).__name__}; pass a "
+                    "SelectorService or a fitted ScheduleTuner")
+
+
+def plan(op: str, operands, schedule: Optional[Schedule] = None,
+         selector=None, backend: str = "auto", **op_kwargs) -> Plan:
+    """Build an executable ``Plan`` for a registered sparse op.
+
+    Exactly one schedule source applies: an explicit ``schedule``, a
+    ``selector`` (``SelectorService`` → cache/tree/verify path, or a fitted
+    ``ScheduleTuner`` → tree-argmin + simulation verify), or the op
+    planner's defaults.
+    """
+    spec = get_op(op)
+    if not isinstance(operands, tuple):
+        operands = (operands,)
+    backend = resolve_backend(backend)
+    provenance: Dict[str, object] = {}
+    if schedule is None and selector is not None:
+        schedule, provenance = _resolve_with_selector(selector, operands[0])
+    if schedule is not None and schedule.backend != "dense" \
+            and spec.layouts and schedule.layout not in spec.layouts:
+        raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
+                         f"schedule asks for {schedule.layout!r}")
+    p = spec.planner(operands, schedule, backend, **op_kwargs)
+    for k, v in provenance.items():
+        setattr(p, k, v)
+    return p
+
+
+def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
+                backend: str = "auto", **op_kwargs) -> Plan:
+    """One stacked jitted launch for a whole same-schedule bucket.
+
+    ``operands`` is a list of per-member sparse operands (CSR or prepared);
+    the returned plan's ``execute`` takes the matching list of runtime
+    inputs and returns the per-member outputs — all members through ONE
+    device program.
+    """
+    spec = get_op(op)
+    if spec.bucket_planner is None:
+        raise ValueError(f"op {op!r} has no stacked bucket launch")
+    if schedule is None:
+        raise ValueError("plan_bucket needs the bucket's shared Schedule")
+    members: List = list(operands)
+    if not members:
+        raise ValueError("empty bucket")
+    backend = resolve_backend(backend)
+    return spec.bucket_planner(members, schedule, backend, **op_kwargs)

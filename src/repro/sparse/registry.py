@@ -1,0 +1,56 @@
+"""Op registry of the plan/execute facade (DESIGN.md §8).
+
+Every sparse op the system serves is registered once, declaring its operand
+spec (human-readable contract), its layout axis (the schedule values its
+planner dispatches on), an optional host-side symbolic phase, and the
+planner that turns (operands, Schedule, backend) into an executable
+``Plan``. Ops that support the schedule-bucketed stacked launch also
+register a ``bucket_planner`` (one jitted program for a whole same-schedule
+bucket). ``repro.sparse.plan`` is the only consumer; kernels' legacy entry
+points delegate here instead of being called directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One registered sparse op."""
+
+    name: str
+    planner: Callable            # (operands, schedule, backend, **kw) -> Plan
+    operand_spec: str = ""       # human-readable operand/runtime contract
+    layouts: Tuple[str, ...] = ("ell",)   # schedule.layout values supported
+    symbolic: Optional[Callable] = None   # host symbolic phase, if the op has one
+    bucket_planner: Optional[Callable] = None  # stacked same-schedule launch
+
+
+_REGISTRY: Dict[str, OpSpec] = {}
+
+
+def register_op(name: str, planner: Callable, *, operand_spec: str = "",
+                layouts: Tuple[str, ...] = ("ell",),
+                symbolic: Optional[Callable] = None,
+                bucket_planner: Optional[Callable] = None,
+                overwrite: bool = False) -> OpSpec:
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"op {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    spec = OpSpec(name, planner, operand_spec, tuple(layouts), symbolic,
+                  bucket_planner)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_op(name: str) -> OpSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sparse op {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,237 @@
+"""``SparseTensor``: the pytree-registered device container of the facade.
+
+One class wraps every prepared layout the kernels consume (DESIGN.md §8):
+
+  ell    globally padded ELL-BSR (``core.csr.ELLBSR``)
+  sell   sliced SELL-BSR cell schedule (``core.csr.SELLBSR``)
+  bsr    raw blocked rows (spgemm/spadd operands; symbolic phase is host-side)
+  dense  the dense-schedule escape hatch (density above the autotune threshold)
+
+The device arrays are pytree *leaves* and the structural facts (layout,
+shape, block size, the ``Schedule`` that built it) are static aux data, so a
+prepared operand passes through ``jit`` / ``vmap`` / buffer donation like
+any other array pytree — the property the old ``prepare*`` family of host
+containers never had. Construction subsumes that family through
+``SparseTensor.from_csr(csr, schedule=...)``; the host-side container is
+kept on the instance (outside the pytree) so characterization counters and
+unflattened copies inside traced code both work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.autotune import SELL_SIGMA, Schedule
+from ..core.csr import BSR, CSR, ELLBSR, SELLBSR, ell_block_cap
+
+HostLayout = Union[ELLBSR, SELLBSR, BSR, np.ndarray]
+
+# Leaf names per layout, in flatten order (the pytree contract).
+LAYOUT_FIELDS: Dict[str, Tuple[str, ...]] = {
+    "ell": ("block_indices", "block_cols", "blocks", "valid_counts"),
+    "sell": ("cell_block", "cell_col", "cell_row", "row_perm",
+             "slice_widths", "blocks"),
+    "bsr": ("block_ptrs", "block_cols", "blocks"),
+    "dense": ("dense",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMeta:
+    """Static (hashable) aux data of a ``SparseTensor`` pytree node."""
+
+    layout: str
+    shape: Tuple[int, int]
+    block_size: int
+    n_block_rows: int = 0
+    slice_height: int = 0
+    sigma: int = 0
+    schedule: Optional[Schedule] = None
+
+
+class SparseTensor:
+    """Device-resident sparse operand; registered as a JAX pytree node."""
+
+    def __init__(self, meta: SparseMeta, arrays: Dict[str, jax.Array],
+                 host: Optional[HostLayout] = None) -> None:
+        if meta.layout not in LAYOUT_FIELDS:
+            raise ValueError(f"unknown layout {meta.layout!r}; "
+                             f"one of {sorted(LAYOUT_FIELDS)}")
+        self.meta = meta
+        self.arrays = dict(arrays)
+        # Host container cache — intentionally NOT a pytree leaf: it is a
+        # construction-side artifact that tracers cannot carry.
+        self._host = host
+
+    # -------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        fields = LAYOUT_FIELDS[self.meta.layout]
+        return tuple(self.arrays[f] for f in fields), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta: SparseMeta, leaves):
+        return cls(meta, dict(zip(LAYOUT_FIELDS[meta.layout], leaves)))
+
+    # ------------------------------------------------------------- basics
+    @property
+    def layout(self) -> str:
+        return self.meta.layout
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.meta.shape
+
+    @property
+    def block_size(self) -> int:
+        return self.meta.block_size
+
+    @property
+    def schedule(self) -> Optional[Schedule]:
+        return self.meta.schedule
+
+    def __repr__(self) -> str:
+        return (f"SparseTensor(layout={self.meta.layout!r}, "
+                f"shape={self.meta.shape}, bs={self.meta.block_size})")
+
+    # ------------------------------------------------------- construction
+    @staticmethod
+    def build_container(csr: CSR, schedule: Schedule, *,
+                        layout: Optional[str] = None,
+                        sigma: int = SELL_SIGMA,
+                        max_blocks: Optional[int] = None) -> HostLayout:
+        """Host-side container a ``Schedule`` names (the old ``prepare*``
+        family as one rule; kernels' shims delegate here)."""
+        if schedule.backend == "dense":
+            return csr.to_dense()
+        if layout == "bsr":
+            return BSR.from_csr(csr, schedule.block_size)
+        if schedule.layout == "sell":
+            return SELLBSR.from_bsr(BSR.from_csr(csr, schedule.block_size),
+                                    max(schedule.slice_height, 1), sigma)
+        bsr = BSR.from_csr(csr, schedule.block_size)
+        mb = max_blocks
+        if mb is None and schedule.ell_quantile < 1.0:
+            mb = ell_block_cap(bsr.blocks_per_row(), schedule.ell_quantile)
+        return ELLBSR.from_bsr(bsr, mb)
+
+    @classmethod
+    def from_csr(cls, csr: CSR, schedule: Optional[Schedule] = None, *,
+                 block_size: int = 128, layout: Optional[str] = None,
+                 slice_height: int = 8, sigma: int = SELL_SIGMA,
+                 max_blocks: Optional[int] = None) -> "SparseTensor":
+        """Prepare ``csr`` under ``schedule`` (or the keyword defaults).
+
+        ``layout="bsr"`` forces the raw blocked container regardless of the
+        schedule's ell/sell axis (spgemm/spadd operands).
+        """
+        if schedule is None:
+            if layout == "sell":
+                schedule = Schedule("bsr", block_size, 1.0, layout="sell",
+                                    slice_height=slice_height)
+            else:
+                schedule = Schedule("bsr", block_size, 1.0)
+        container = cls.build_container(csr, schedule, layout=layout,
+                                        sigma=sigma, max_blocks=max_blocks)
+        return cls.from_layout(container, schedule=schedule)
+
+    @classmethod
+    def from_layout(cls, container: HostLayout,
+                    schedule: Optional[Schedule] = None) -> "SparseTensor":
+        """Wrap an existing host container (ELLBSR/SELLBSR/BSR/dense)."""
+        if isinstance(container, ELLBSR):
+            if schedule is None:
+                schedule = Schedule("bsr", container.block_size, 1.0)
+            meta = SparseMeta("ell", container.shape, container.block_size,
+                              n_block_rows=container.block_indices.shape[0],
+                              schedule=schedule)
+            arrays = {
+                "block_indices": jnp.asarray(container.block_indices, jnp.int32),
+                "block_cols": jnp.asarray(container.block_cols, jnp.int32),
+                "blocks": jnp.asarray(container.blocks, jnp.float32),
+                "valid_counts": jnp.asarray(container.valid_counts, jnp.int32),
+            }
+            return cls(meta, arrays, host=container)
+        if isinstance(container, SELLBSR):
+            if schedule is None:
+                schedule = Schedule("bsr", container.block_size, 1.0,
+                                    layout="sell",
+                                    slice_height=container.slice_height)
+            meta = SparseMeta("sell", container.shape, container.block_size,
+                              n_block_rows=container.n_block_rows,
+                              slice_height=container.slice_height,
+                              sigma=container.sigma, schedule=schedule)
+            arrays = {
+                "cell_block": jnp.asarray(container.cell_block, jnp.int32),
+                "cell_col": jnp.asarray(container.cell_col, jnp.int32),
+                "cell_row": jnp.asarray(container.cell_row, jnp.int32),
+                "row_perm": jnp.asarray(container.row_perm, jnp.int32),
+                "slice_widths": jnp.asarray(container.slice_widths, jnp.int32),
+                "blocks": jnp.asarray(container.blocks, jnp.float32),
+            }
+            return cls(meta, arrays, host=container)
+        if isinstance(container, BSR):
+            if schedule is None:
+                schedule = Schedule("bsr", container.block_size, 1.0)
+            meta = SparseMeta("bsr", container.shape, container.block_size,
+                              n_block_rows=container.n_block_rows,
+                              schedule=schedule)
+            arrays = {
+                "block_ptrs": jnp.asarray(container.block_ptrs, jnp.int32),
+                "block_cols": jnp.asarray(container.block_cols, jnp.int32),
+                "blocks": jnp.asarray(container.blocks, jnp.float32),
+            }
+            return cls(meta, arrays, host=container)
+        dense = np.asarray(container, np.float32)
+        if dense.ndim != 2:
+            raise TypeError(f"cannot wrap {type(container).__name__} as a "
+                            "SparseTensor")
+        if schedule is None:
+            schedule = Schedule("dense", 128, 1.0)
+        meta = SparseMeta("dense", dense.shape, schedule.block_size,
+                          schedule=schedule)
+        return cls(meta, {"dense": jnp.asarray(dense)}, host=dense)
+
+    @classmethod
+    def wrap(cls, obj, schedule: Optional[Schedule] = None) -> "SparseTensor":
+        """Coerce any accepted operand form — CSR, host container, or an
+        already-built SparseTensor — into a SparseTensor."""
+        if isinstance(obj, SparseTensor):
+            return obj
+        if isinstance(obj, CSR):
+            return cls.from_csr(obj, schedule=schedule)
+        return cls.from_layout(obj, schedule=schedule)
+
+    # ---------------------------------------------------------- host side
+    def to_host(self) -> HostLayout:
+        """The host container (rebuilt from device leaves if this instance
+        came out of a pytree unflatten)."""
+        if self._host is not None:
+            return self._host
+        m, a = self.meta, self.arrays
+        if m.layout == "ell":
+            host: HostLayout = ELLBSR(
+                np.asarray(a["block_indices"]), np.asarray(a["block_cols"]),
+                np.asarray(a["blocks"]), m.shape, m.block_size,
+                np.asarray(a["valid_counts"]))
+        elif m.layout == "sell":
+            host = SELLBSR(
+                np.asarray(a["cell_block"]), np.asarray(a["cell_col"]),
+                np.asarray(a["cell_row"]), np.asarray(a["row_perm"]),
+                np.asarray(a["slice_widths"]), np.asarray(a["blocks"]),
+                m.shape, m.block_size, m.slice_height, m.sigma)
+        elif m.layout == "bsr":
+            host = BSR(np.asarray(a["block_ptrs"], np.int64),
+                       np.asarray(a["block_cols"]), np.asarray(a["blocks"]),
+                       m.shape, m.block_size)
+        else:
+            host = np.asarray(a["dense"])
+        self._host = host
+        return host
+
+
+jax.tree_util.register_pytree_node(
+    SparseTensor, SparseTensor.tree_flatten, SparseTensor.tree_unflatten)

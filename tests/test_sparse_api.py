@@ -1,0 +1,403 @@
+"""Plan/execute facade (repro/sparse, DESIGN.md §8): SparseTensor pytree
+round-trips under jit (donation-safe), plan-vs-legacy numerical equivalence
+for all four bsr ops (+ moe_gmm), the schedule-bucket stacked launch (ONE
+jitted dispatch per bucket, asserted via the launch/trace counters), the
+vectorized spgemm/spadd symbolic phases, and SelectorService.refit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSR, TPU_V5E, ScheduleTuner, corpus
+from repro.core.autotune import Schedule
+from repro.core.csr import BSR
+from repro.core.synthetic import gen_zipf
+from repro.kernels import bsr_spadd, bsr_spgemm, bsr_spmv, moe_gmm
+from repro.kernels.bsr_spgemm.ops import spgemm_symbolic, spgemm_symbolic_cells
+from repro.kernels.bsr_spadd.ops import spadd_symbolic
+from repro.selector import ScheduleCache, SelectorService
+from repro.sparse import (SparseTensor, get_op, launch_count, list_ops,
+                          moe_tile_schedule, plan, plan_bucket,
+                          reset_counters, trace_count)
+
+RNG = np.random.default_rng(7)
+
+
+def _sparse(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((n, m)) < density) * rng.standard_normal((n, m))
+    return CSR.from_dense(d.astype(np.float32))
+
+
+# ------------------------------------------------------------ SparseTensor
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_sparse_tensor_pytree_roundtrip_under_jit(layout):
+    """Flatten/unflatten preserves leaves + static meta; a jitted function
+    can consume and rebuild the pytree (prepared operands pass through jit
+    like any array pytree)."""
+    A = gen_zipf(256, seed=3)
+    st = SparseTensor.from_csr(A, block_size=32,
+                               layout=None if layout == "ell" else "sell")
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    assert all(isinstance(l, jax.Array) for l in leaves)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert st2.meta == st.meta
+    for k in st.arrays:
+        np.testing.assert_array_equal(np.asarray(st2.arrays[k]),
+                                      np.asarray(st.arrays[k]))
+    # jit: scale every leaf inside the trace, structure survives
+    scaled = jax.jit(lambda t: jax.tree.map(lambda a: a * 2, t))(st)
+    assert isinstance(scaled, SparseTensor)
+    assert scaled.meta == st.meta
+    np.testing.assert_allclose(np.asarray(scaled.arrays["blocks"]),
+                               2.0 * np.asarray(st.arrays["blocks"]))
+    # the rebuilt host container matches the original schedule semantics
+    host = scaled.to_host()
+    assert host.block_size == st.block_size
+
+
+def test_sparse_tensor_donation_safe():
+    """donate_argnums over the pytree neither errors nor corrupts results
+    (buffers may simply not be reused on CPU — that is fine)."""
+    A = gen_zipf(128, seed=4)
+    st = SparseTensor.from_csr(A, block_size=16)
+    f = jax.jit(lambda t: jax.tree.map(lambda a: a + 1, t), donate_argnums=0)
+    out = f(st)
+    assert isinstance(out, SparseTensor)
+    assert out.meta == st.meta
+
+
+def test_from_csr_subsumes_prepare_family():
+    """SparseTensor.from_csr builds the same containers the legacy
+    prepare/prepare_sell/prepare_with_schedule shims return."""
+    A = gen_zipf(256, seed=5)
+    ell = bsr_spmv.ops.prepare(A, 32)
+    st = SparseTensor.from_csr(A, block_size=32)
+    np.testing.assert_array_equal(st.to_host().block_indices,
+                                  ell.block_indices)
+    sched = Schedule("bsr", 32, 1.0, layout="sell", slice_height=4)
+    sell = bsr_spmv.ops.prepare_with_schedule(A, sched)
+    st2 = SparseTensor.from_csr(A, schedule=sched)
+    np.testing.assert_array_equal(st2.to_host().cell_block, sell.cell_block)
+    np.testing.assert_array_equal(st2.to_host().row_perm, sell.row_perm)
+
+
+# ------------------------------------------------- plan vs legacy entry points
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_plan_matches_legacy_spmv_spmm(backend):
+    A = gen_zipf(320, seed=11)
+    x = RNG.standard_normal(320).astype(np.float32)
+    X = RNG.standard_normal((320, 5)).astype(np.float32)
+    for sched in (Schedule("bsr", 32, 1.0),
+                  Schedule("bsr", 32, 1.0, layout="sell", slice_height=4)):
+        y_plan = np.asarray(plan("spmv", (A,), schedule=sched,
+                                 backend=backend).execute(x))
+        y_leg = np.asarray(bsr_spmv.bsr_spmv_scheduled(A, x, sched,
+                                                       backend=backend))
+        np.testing.assert_allclose(y_plan, y_leg, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(y_plan, A.to_dense() @ x,
+                                   rtol=1e-3, atol=1e-3)
+        Y_plan = np.asarray(plan("spmm", (A,), schedule=sched,
+                                 backend=backend).execute(X))
+        np.testing.assert_allclose(Y_plan, A.to_dense() @ X,
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_plan_matches_legacy_spgemm_spadd():
+    a, b = _sparse(96, 96, 0.08, 1), _sparse(96, 96, 0.08, 2)
+    C_plan = plan("spgemm", (a, b), block_size=16).execute()
+    C_leg = bsr_spgemm.bsr_spgemm(a, b, block_size=16, backend="jnp")
+    np.testing.assert_allclose(C_plan.to_dense(), C_leg.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(C_plan.to_dense(),
+                               a.to_dense() @ b.to_dense(),
+                               rtol=2e-4, atol=2e-4)
+    D_plan = plan("spadd", (a, b), block_size=16).execute()
+    D_leg = bsr_spadd.bsr_spadd(a, b, block_size=16, backend="jnp")
+    np.testing.assert_allclose(D_plan.to_dense(), D_leg.to_dense(),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(D_plan.to_dense(),
+                               a.to_dense() + b.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_plan_moe_gmm_matches_legacy(backend):
+    T, K, N, E, tm = 160, 32, 48, 3, 32
+    tokens = RNG.standard_normal((T, K)).astype(np.float32)
+    eot = RNG.integers(0, E, T)
+    x, tile_e, inv = moe_gmm.route_and_pad(tokens, eot, E, tile_m=tm)
+    w = RNG.standard_normal((E, K, N)).astype(np.float32)
+    out_plan = np.asarray(plan("moe_gmm", (tile_e,), tile_m=tm, tile_n=16,
+                               tile_k=16, backend=backend).execute(x, w))
+    out_leg = np.asarray(moe_gmm.moe_gmm(
+        jnp.asarray(tile_e), jnp.asarray(x), jnp.asarray(w), tile_m=tm,
+        tile_n=16, tile_k=16, backend=backend))
+    np.testing.assert_allclose(out_plan, out_leg, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_dense_schedule_escape_hatch():
+    A = _sparse(64, 80, 0.5, 9)
+    x = RNG.standard_normal(80).astype(np.float32)
+    p = plan("spmv", (A,), schedule=Schedule("dense", 128, 1.0))
+    assert p.operands[0].layout == "dense"
+    np.testing.assert_allclose(np.asarray(p.execute(x)), A.to_dense() @ x,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_registry_contract():
+    assert set(list_ops()) >= {"spmv", "spmm", "spgemm", "spadd", "moe_gmm"}
+    assert get_op("spgemm").layouts == ("ell", "sell")
+    with pytest.raises(KeyError, match="unknown sparse op"):
+        get_op("nope")
+    with pytest.raises(ValueError, match="layouts"):
+        plan("moe_gmm", (np.zeros(2, np.int32),),
+             schedule=Schedule("bsr", 16, 1.0, layout="sell", slice_height=4))
+
+
+def test_spadd_accepts_sell_schedule_like_legacy():
+    """An spadd tuner can legitimately select a sell-layout schedule (its
+    modeled time ignores layout); the op must keep the legacy contract of
+    consuming only block_size."""
+    a, b = _sparse(64, 64, 0.06, 6), _sparse(64, 64, 0.06, 7)
+    sched = Schedule("bsr", 16, 1.0, layout="sell", slice_height=8)
+    C = plan("spadd", (a, b), schedule=sched).execute()
+    np.testing.assert_allclose(C.to_dense(), a.to_dense() + b.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+    C_leg = bsr_spadd.bsr_spadd(a, b, schedule=sched, backend="jnp")
+    np.testing.assert_allclose(C.to_dense(), C_leg.to_dense())
+
+
+# ------------------------------------------------------ stacked bucket launch
+
+def test_bucket_of_3_stacked_launch_equivalence():
+    """A schedule bucket of 3 matrices executes through ONE jitted stacked
+    launch (trace+launch counters), with outputs matching per-matrix
+    execution."""
+    mats = [gen_zipf(192 + 32 * i, seed=20 + i) for i in range(3)]
+    xs = [RNG.standard_normal(m.shape[1]).astype(np.float32) for m in mats]
+    sched = Schedule("bsr", 32, 1.0, layout="sell", slice_height=4)
+
+    singles = [np.asarray(plan("spmv", (m,), schedule=sched).execute(x))
+               for m, x in zip(mats, xs)]
+    reset_counters()
+    bucket = plan_bucket("spmv", mats, sched)
+    assert bucket.n_members == 3
+    ys = bucket.execute(xs)
+    assert launch_count("spmv") == 1          # one dispatch for the bucket
+    assert trace_count("matvec_stacked") == 1  # one compiled program
+    for y, y_single in zip(ys, singles):
+        np.testing.assert_allclose(np.asarray(y), y_single,
+                                   rtol=1e-5, atol=1e-5)
+    # second tick with same shapes: no retrace, still one launch per bucket
+    bucket.execute(xs)
+    assert launch_count("spmv") == 2
+    assert trace_count("matvec_stacked") == 1
+
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_bucket_honors_interpret_backend(layout):
+    """The stacked launch runs the actual kernel schedule for non-jnp
+    backends (unrolled inside one program), not the jnp formulation."""
+    mats = [gen_zipf(128 + 32 * i, seed=40 + i) for i in range(3)]
+    xs = [RNG.standard_normal(m.shape[1]).astype(np.float32) for m in mats]
+    sched = (Schedule("bsr", 32, 1.0) if layout == "ell"
+             else Schedule("bsr", 32, 1.0, layout="sell", slice_height=2))
+    ys = plan_bucket("spmv", mats, sched, backend="interpret").execute(xs)
+    for m, x, y in zip(mats, xs, ys):
+        np.testing.assert_allclose(np.asarray(y), m.to_dense() @ x,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bucket_rejects_mixed_rhs_signatures():
+    mats = [gen_zipf(128, seed=50), gen_zipf(128, seed=51)]
+    bucket = plan_bucket("spmv", mats, Schedule("bsr", 32, 1.0))
+    with pytest.raises(ValueError, match="homogeneous runtime inputs"):
+        bucket.execute([RNG.standard_normal(128).astype(np.float32),
+                        RNG.standard_normal((128, 3)).astype(np.float32)])
+
+
+def test_service_bucket_executes_one_stacked_launch():
+    """SelectorService._execute_bucket routes a whole bucket through one
+    plan_bucket launch (PR-2 follow-up closed)."""
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache(), batch_max=8)
+    A = gen_zipf(300, seed=8)
+    xs = [RNG.standard_normal(300).astype(np.float32) for _ in range(3)]
+    for i, x in enumerate(xs):
+        svc.submit(f"r{i}", A, x)
+    reset_counters()
+    decisions = svc.run()
+    tel = svc.telemetry()
+    assert tel["buckets"] == 1            # same matrix -> one schedule bucket
+    assert tel["stacked_launches"] == 1
+    assert launch_count("spmv") == 1      # ONE stacked dispatch for 3 members
+    for d, x in zip(decisions, xs):
+        np.testing.assert_allclose(d.y, A.to_dense() @ x, rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_service_bucket_mixed_vector_and_multi_rhs():
+    """A bucket mixing (n,) and (n, k) RHS members splits into one stacked
+    launch per RHS signature — every member still executes correctly."""
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache(), batch_max=8)
+    A = gen_zipf(300, seed=8)
+    x1 = RNG.standard_normal(300).astype(np.float32)
+    X2 = RNG.standard_normal((300, 4)).astype(np.float32)
+    svc.submit("vec", A, x1)
+    svc.submit("mat", A, X2)
+    decisions = {d.name: d for d in svc.run()}
+    np.testing.assert_allclose(decisions["vec"].y, A.to_dense() @ x1,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(decisions["mat"].y, A.to_dense() @ X2,
+                               rtol=2e-4, atol=2e-4)
+    assert svc.telemetry()["stacked_launches"] == 2
+
+
+# --------------------------------------------- vectorized symbolic phases
+
+def _spgemm_symbolic_rowloop(bsr_a, bsr_b):
+    """The seed's per-row symbolic phase: the oracle for the vectorized one."""
+    b_rows = {}
+    for br in range(bsr_b.n_block_rows):
+        lo, hi = int(bsr_b.block_ptrs[br]), int(bsr_b.block_ptrs[br + 1])
+        b_rows[br] = {int(bsr_b.block_cols[k]): k for k in range(lo, hi)}
+    c_cols_all, pairs_all = [], []
+    c_ptrs = np.zeros(bsr_a.n_block_rows + 1, dtype=np.int64)
+    for br in range(bsr_a.n_block_rows):
+        contrib = {}
+        for k in range(int(bsr_a.block_ptrs[br]), int(bsr_a.block_ptrs[br + 1])):
+            kk = int(bsr_a.block_cols[k])
+            for cj, bidx in b_rows.get(kk, {}).items():
+                contrib.setdefault(cj, []).append((k, bidx))
+        for cj in sorted(contrib):
+            c_cols_all.append(cj)
+            pairs_all.append(contrib[cj])
+        c_ptrs[br + 1] = len(c_cols_all)
+    return c_ptrs, c_cols_all, pairs_all
+
+
+@pytest.mark.parametrize("shape", [(64, 80, 48), (96, 96, 96), (16, 160, 16)])
+def test_spgemm_symbolic_vectorized_matches_rowloop(shape):
+    n, k, m = shape
+    a, b = _sparse(n, k, 0.1, n), _sparse(k, m, 0.1, m + 1)
+    ba, bb = BSR.from_csr(a, 16), BSR.from_csr(b, 16)
+    c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(ba, bb)
+    ref_ptrs, ref_cols, ref_pairs = _spgemm_symbolic_rowloop(ba, bb)
+    np.testing.assert_array_equal(c_ptrs, ref_ptrs)
+    np.testing.assert_array_equal(c_cols, ref_cols)
+    assert pair_a.shape[1] == max((len(p) for p in ref_pairs), default=1)
+    for i, plist in enumerate(ref_pairs):
+        for j, (ka, kb) in enumerate(plist):
+            assert pair_a[i, j] == ka and pair_b[i, j] == kb
+        assert (pair_a[i, len(plist):] == ba.n_blocks).all()
+        assert (pair_b[i, len(plist):] == bb.n_blocks).all()
+
+
+def test_spgemm_cells_consistent_with_pairs():
+    a, b = _sparse(96, 64, 0.12, 2), _sparse(64, 80, 0.12, 3)
+    ba, bb = BSR.from_csr(a, 16), BSR.from_csr(b, 16)
+    c_ptrs, c_cols, ca, cb, cc = spgemm_symbolic_cells(ba, bb)
+    p_ptrs, p_cols, pair_a, pair_b = spgemm_symbolic(ba, bb)
+    np.testing.assert_array_equal(c_ptrs, p_ptrs)
+    np.testing.assert_array_equal(c_cols, p_cols)
+    assert (np.diff(cc) >= 0).all()   # output-residency contract
+    # every real pair appears exactly once, grouped by output block
+    n_real = (pair_a != ba.n_blocks).sum()
+    assert ca.size == cb.size == cc.size == n_real
+
+
+def test_spadd_symbolic_vectorized_union():
+    a, b = _sparse(100, 100, 0.06, 4), _sparse(100, 100, 0.06, 5)
+    ba, bb = BSR.from_csr(a, 16), BSR.from_csr(b, 16)
+    c_ptrs, c_cols, ia, ib = spadd_symbolic(ba, bb)
+    assert c_ptrs[-1] == len(c_cols) == len(ia) == len(ib)
+    n_bc = -(-100 // 16)
+    rows = np.repeat(np.arange(len(c_ptrs) - 1), np.diff(c_ptrs))
+    keys = set(rows * n_bc + c_cols)
+    for bsr in (ba, bb):
+        r = np.repeat(np.arange(bsr.n_block_rows), bsr.blocks_per_row())
+        assert set(r * n_bc + bsr.block_cols.astype(np.int64)) <= keys
+    # sentinel convention: where both present, ia/ib point at real blocks
+    assert (ia < ba.n_blocks).sum() == ba.n_blocks
+    assert (ib < bb.n_blocks).sum() == bb.n_blocks
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_spgemm_sell_layout_axis(backend):
+    """The SELL cell-flattening trick on ragged Gustavson block-rows: the
+    `layout="sell"` axis of the registered spgemm op matches the padded-pair
+    path and the dense oracle."""
+    a, b = gen_zipf(256, seed=31), gen_zipf(256, seed=32)
+    sched = Schedule("bsr", 32, 1.0, layout="sell")
+    C = plan("spgemm", (a, b), schedule=sched, backend=backend).execute()
+    np.testing.assert_allclose(C.to_dense(), a.to_dense() @ b.to_dense(),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ selector refit
+
+def test_selector_refit_consumes_feedback_buffer():
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache(),
+                          confidence_threshold=2.0)  # force verify fallback
+    held = corpus(n_matrices=4, n_min=256, n_max=384, seed=77,
+                  include_synthetic=False)
+    for name, _, A in held:
+        svc.submit(name, A)
+    svc.run()
+    n_ex = len(svc.retraining_examples)
+    assert n_ex >= 3
+    assert svc.refit(min_examples=n_ex + 1) == {"refit": 0.0,
+                                                "examples": float(n_ex)}
+    old_tree = tuner.tree
+    out = svc.refit(min_examples=2)
+    assert out == {"refit": 1.0, "examples": float(n_ex)}
+    assert not svc.retraining_examples          # buffer consumed
+    assert tuner.tree is not old_tree           # tree actually refreshed
+    assert svc.telemetry()["refits"] == 1.0
+    # service still serves sane schedules afterwards
+    dec = svc.select(held[0][2])
+    assert dec.schedule.block_size in (32, 64, 128, 256)
+
+
+# ----------------------------------------------------- selector-backed plans
+
+def test_plan_with_selector_service_provenance():
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache())
+    A = gen_zipf(300, seed=13)
+    p1 = plan("spmv", (A,), selector=svc)
+    assert p1.source in ("selector-tree", "selector-verify")
+    assert p1.fingerprint_key
+    p2 = plan("spmv", (A,), selector=svc)   # repeat traffic hits the cache
+    assert p2.source == "selector-cache"
+    assert p2.schedule == p1.schedule
+    x = RNG.standard_normal(300).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(p2.execute(x)), A.to_dense() @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_tile_schedule_cached_by_routing_fingerprint():
+    from repro.core import TPU_V4
+    cache = ScheduleCache()
+    balanced = np.full(8, 100.0)
+    hot = np.array([600.0] + [10.0] * 7)
+    s1 = moe_tile_schedule(balanced, 512, TPU_V5E, cache=cache)
+    s2 = moe_tile_schedule(hot, 512, TPU_V5E, cache=cache)
+    assert s1.block_size > s2.block_size     # imbalance -> smaller tiles
+    assert moe_tile_schedule(balanced, 512, TPU_V5E, cache=cache) == s1
+    tel = cache.telemetry()
+    assert tel["hits"] == 1 and tel["entries"] == 2
+    # a shared cache must not serve one platform's tile to another: the
+    # platform is part of the routing fingerprint key
+    moe_tile_schedule(balanced, 512, TPU_V4, cache=cache)
+    assert cache.telemetry()["hits"] == 1    # miss, not a v5e hit
+    assert cache.telemetry()["entries"] == 3
