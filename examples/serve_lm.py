@@ -18,21 +18,27 @@ import numpy as np
 from repro.core import TPU_V5E
 from repro.launch.serve import main as serve_main
 from repro.selector import ScheduleCache
-from repro.sparse import moe_tile_schedule, plan, route_and_pad
+from repro.sparse import (PreparedStore, moe_tile_schedule, plan,
+                          route_and_pad)
 
 
 def decode_moe_ticks(n_ticks: int, d_model: int = 256, d_ff: int = 512,
                      n_experts: int = 8, batch: int = 4,
-                     cache: ScheduleCache = None, seed: int = 0) -> dict:
+                     cache: ScheduleCache = None,
+                     store: PreparedStore = None, seed: int = 0) -> dict:
     """Run the decode-tick MoE expert compute through the facade.
 
     Each tick: route the decode batch's tokens, obtain the grouped-GEMM
     tile from the selector-backed cache, and execute the expert GEMM via
     ``plan("moe_gmm", ...)``. Routing alternates between a balanced and a
-    hot-expert regime, the recurring traffic the cache exists for.
+    hot-expert regime, the recurring traffic the caches exist for: the
+    ``ScheduleCache`` skips re-running the tile rule and the
+    ``PreparedStore`` skips re-staging the recurring routing tiles
+    (DESIGN.md §9 — the zero-rebuild serving loop at decode granularity).
     """
     rng = np.random.default_rng(seed)
     cache = cache if cache is not None else ScheduleCache()
+    store = store if store is not None else PreparedStore()
     w = rng.standard_normal((n_experts, d_model, d_ff)).astype(np.float32)
     ticks = []
     for t in range(n_ticks):
@@ -45,12 +51,16 @@ def decode_moe_ticks(n_ticks: int, d_model: int = 256, d_ff: int = 512,
         tokens = rng.standard_normal((batch, d_model)).astype(np.float32)
         x, tile_e, _ = route_and_pad(tokens, eot, n_experts,
                                      tile_m=sched.block_size)
-        p = plan("moe_gmm", (tile_e,), schedule=sched, backend="jnp")
+        p = plan("moe_gmm", (tile_e,), schedule=sched, backend="jnp",
+                 store=store)
         out = np.asarray(p.execute(x, w))
         ticks.append((sched.block_size, out.shape))
     tel = cache.telemetry()
+    prep = store.telemetry()
     return {"ticks": ticks, "cache_hit_rate": tel["hit_rate"],
-            "cache_entries": tel["entries"]}
+            "cache_entries": tel["entries"],
+            "prep_hit_rate": prep["hit_rate"],
+            "prep_entries": prep["entries"]}
 
 
 def main() -> None:
@@ -72,7 +82,8 @@ def main() -> None:
     tiles = sorted({bs for bs, _ in moe["ticks"]})
     print(f"decode MoE: {len(moe['ticks'])} ticks, tile_m choices {tiles}, "
           f"cache hit rate {moe['cache_hit_rate']:.2f} "
-          f"({moe['cache_entries']:.0f} entries)")
+          f"({moe['cache_entries']:.0f} entries), prepared-operand hit rate "
+          f"{moe['prep_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,11 @@ SLICE_HEIGHTS = (4, 8, 16)      # SELL slice heights swept as a schedule axis
 SELL_SIGMA = 64                 # sorting window (block-rows); fixed, not swept
 DENSE_DENSITY_THRESHOLD = 0.25  # above this, a dense matmul wins trivially
 TUNER_TREE_DEPTH = 14           # cost-tree depth shared by fit() and refit()
+# fit(prune_top_k="auto"): grids past this size prune themselves with the
+# provisional tree (ROADMAP item — fit cost must not scale with the full
+# layout x block_size x quantile x slice_height product as axes grow).
+PRUNE_GRID_THRESHOLD = 50
+AUTO_PRUNE_TOP_K = 8
 # Names of the schedule-parameter features appended to the static metrics.
 CFG_FEATURES = ("cfg_block_size", "cfg_ell_quantile", "cfg_slice_height",
                 "cfg_n_rhs")
@@ -92,7 +97,8 @@ class ScheduleTuner:
         self._train_ys: Optional[np.ndarray] = None
 
     def fit(self, mats: Sequence[Matrix], max_mats: int = 64, seed: int = 0,
-            prune_top_k: Optional[int] = None, bootstrap_mats: int = 8
+            prune_top_k="auto", bootstrap_mats: int = 8,
+            candidates: Optional[Sequence[Schedule]] = None
             ) -> "ScheduleTuner":
         """Train the cost tree on (static metrics, schedule params) rows.
 
@@ -103,10 +109,24 @@ class ScheduleTuner:
         stops scaling with the full layout x block_size x quantile x
         slice_height product. ``fit_simulations_`` records the number of
         schedule simulations actually run.
+
+        The default ``prune_top_k="auto"`` turns pruning on
+        (``AUTO_PRUNE_TOP_K``) once the candidate grid exceeds
+        ``PRUNE_GRID_THRESHOLD`` schedules and sweeps fully below it; pass
+        an int to force a k or ``None`` to force the full sweep.
+        ``candidates`` overrides the swept grid (defaults to
+        ``candidate_schedules(n_rhs)``).
         """
         rng = np.random.default_rng(seed)
         idx = rng.permutation(len(mats))[:max_mats]
-        candidates = candidate_schedules(self.n_rhs)
+        candidates = (candidate_schedules(self.n_rhs) if candidates is None
+                      else list(candidates))
+        if isinstance(prune_top_k, str):
+            if prune_top_k != "auto":
+                raise ValueError(f"prune_top_k must be an int, None, or "
+                                 f"'auto', got {prune_top_k!r}")
+            prune_top_k = (AUTO_PRUNE_TOP_K
+                           if len(candidates) > PRUNE_GRID_THRESHOLD else None)
         rows, ys = [], []
         feature_names: Optional[List[str]] = None
         provisional: Optional[DecisionTreeRegressor] = None

@@ -34,8 +34,14 @@ def main(argv: Optional[list] = None) -> dict:
     ap.add_argument("--n-max", type=int, default=768)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--confidence-threshold", type=float, default=0.02)
-    ap.add_argument("--prune-top-k", type=int, default=0,
-                    help="prune the fit() sweep with the provisional tree")
+    ap.add_argument("--prune-top-k", type=int, default=-1,
+                    help="prune the fit() sweep with the provisional tree: "
+                         "-1 = auto (prune once the grid passes the size "
+                         "threshold), 0 = force the full sweep, k > 0 = "
+                         "force top-k")
+    ap.add_argument("--refit-every", type=int, default=0,
+                    help="fold verify feedback into the tuner tree every N "
+                         "serving ticks (0 = never)")
     ap.add_argument("--cache-path", default=None,
                     help="persist the schedule cache to this JSON file")
     ap.add_argument("--execute", action="store_true",
@@ -53,14 +59,16 @@ def main(argv: Optional[list] = None) -> dict:
     t0 = time.time()
     tuner = ScheduleTuner(args.kernel, platform).fit(
         train, max_mats=args.train_mats,
-        prune_top_k=args.prune_top_k or None)
+        prune_top_k=("auto" if args.prune_top_k < 0
+                     else args.prune_top_k or None))
     t_fit = time.time() - t0
     print(f"tuner fit: {len(train)} train mats, "
           f"{tuner.fit_simulations_} simulations, {t_fit:.1f}s")
 
     cache = ScheduleCache(path=args.cache_path)
     svc = SelectorService(tuner, cache=cache, batch_max=args.batch,
-                          confidence_threshold=args.confidence_threshold)
+                          confidence_threshold=args.confidence_threshold,
+                          refit_every=args.refit_every)
     rng = np.random.default_rng(args.seed)
     for r in range(args.requests):
         name, _, A = held[r % len(held)]
@@ -92,6 +100,10 @@ def main(argv: Optional[list] = None) -> dict:
     print(f"batches {tel['batches']:.0f}  kernel buckets {tel['buckets']:.0f} "
           f"(mean size {tel['mean_bucket_size']:.1f}, "
           f"max {tel['max_bucket_size']:.0f})  executed {tel['executed']:.0f}")
+    print(f"prepared store: {tel['prep_entries']:.0f} entries, "
+          f"hit rate {tel['prep_hit_rate']:.2f}, "
+          f"{tel['prep_bytes_in_use'] / 1e6:.1f} MB resident  "
+          f"refits {tel['refits']:.0f} (every {args.refit_every or '-'} ticks)")
     cache.flush()
     if args.cache_path:
         print(f"cache persisted to {args.cache_path} "

@@ -25,7 +25,7 @@ for the whole bucket, not one dispatch per member.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -42,6 +42,7 @@ class Request:
     name: str
     csr: CSR
     x: Optional[np.ndarray] = None   # optional RHS: execute the kernel too
+    ck: Optional[str] = None         # content_key memo (filled by _decide)
 
 
 @dataclasses.dataclass
@@ -55,14 +56,27 @@ class Decision:
     batch_id: int = -1
     bucket: int = -1         # bucket index within the batch
     y: Optional[np.ndarray] = None   # kernel output when the request carried x
+    ck: Optional[str] = None  # exact-bytes content key (PreparedStore reuse)
 
 
 class SelectorService:
-    """Batched, cached, tree-predicted kernel-config selection."""
+    """Batched, cached, tree-predicted kernel-config selection.
+
+    Beyond schedule selection, the service owns a ``PreparedStore``
+    (DESIGN.md §9): every bucket it executes — and every
+    ``plan(..., selector=service)`` call — caches its finished
+    device-resident operands there, so repeat traffic skips host prep as
+    well as selection. ``refit_every=N`` schedules
+    ``refit(min_examples=refit_min_examples)`` from the serving loop every
+    N ``process_pending`` ticks (ROADMAP follow-up), with refit events
+    recorded in the telemetry counters.
+    """
 
     def __init__(self, tuner: ScheduleTuner, cache: Optional[ScheduleCache] = None,
                  confidence_threshold: float = 0.02, verify_top_k: int = 0,
-                 batch_max: int = 16) -> None:
+                 batch_max: int = 16, prepared_store=None,
+                 refit_every: int = 0, refit_min_examples: int = 8) -> None:
+        from ..sparse.prepared import PreparedStore
         self.tuner = tuner
         self.predictor = SchedulePredictor(tuner)
         self.cache = cache if cache is not None else ScheduleCache()
@@ -76,11 +90,22 @@ class SelectorService:
         # k > 0 = verify only the tree's top-k ranked candidates.
         self.verify_top_k = int(verify_top_k)
         self.batch_max = max(int(batch_max), 1)
+        self.prepared_store = (prepared_store if prepared_store is not None
+                               else PreparedStore())
+        self.refit_every = max(int(refit_every), 0)
+        self.refit_min_examples = int(refit_min_examples)
         self.pending: "deque[Request]" = deque()
         self.retraining_examples: List[Dict] = []
+        # Fingerprint memo keyed by exact matrix bytes: characterize() is
+        # milliseconds per matrix, so on repeat traffic it would dominate
+        # the whole zero-rebuild path; a byte-identical matrix reuses its
+        # Fingerprint the same way it reuses its prepared operands.
+        self._fp_memo: "OrderedDict[str, Fingerprint]" = OrderedDict()
+        self._fp_memo_cap = 4096
         self._counts = {"requests": 0, "cache_hits": 0, "tree_served": 0,
                         "verify_fallbacks": 0, "batches": 0, "buckets": 0,
-                        "executed": 0, "stacked_launches": 0, "refits": 0}
+                        "executed": 0, "stacked_launches": 0, "refits": 0,
+                        "ticks": 0, "fp_memo_hits": 0}
         self._bucket_sizes: List[int] = []
 
     # ------------------------------------------------------------- ingress
@@ -106,13 +131,27 @@ class SelectorService:
         timed.sort(key=lambda p: p[0])
         return timed[0][1], timed[0][0]
 
-    def _decide(self, req: Request, batch_id: int) -> Decision:
+    def _fingerprint(self, req: Request) -> Fingerprint:
+        from ..sparse.prepared import content_key
+        req.ck = content_key(req.csr)
+        fp = self._fp_memo.get(req.ck)
+        if fp is not None:
+            self._fp_memo.move_to_end(req.ck)
+            self._counts["fp_memo_hits"] += 1
+            return fp
         fp = fingerprint(req.csr)
+        self._fp_memo[req.ck] = fp
+        while len(self._fp_memo) > self._fp_memo_cap:
+            self._fp_memo.popitem(last=False)
+        return fp
+
+    def _decide(self, req: Request, batch_id: int) -> Decision:
+        fp = self._fingerprint(req)
         cached = self.cache.get(fp)
         if cached is not None:
             self._counts["cache_hits"] += 1
             return Decision(req.name, cached, "cache", 1.0, fp.key, None,
-                            batch_id)
+                            batch_id, ck=req.ck)
         pred: Prediction = self.predictor.predict(fp)
         if pred.schedule.backend != "dense" and \
                 pred.confidence < self.confidence_threshold:
@@ -121,11 +160,11 @@ class SelectorService:
             self.cache.put(fp, sched, "verify", t)
             self.retraining_examples.append(retraining_row(fp, sched, t))
             return Decision(req.name, sched, "verify", pred.confidence,
-                            fp.key, t, batch_id)
+                            fp.key, t, batch_id, ck=req.ck)
         self._counts["tree_served"] += 1
         self.cache.put(fp, pred.schedule, "tree", pred.tree_time_s)
         return Decision(req.name, pred.schedule, "tree", pred.confidence,
-                        fp.key, pred.tree_time_s, batch_id)
+                        fp.key, pred.tree_time_s, batch_id, ck=req.ck)
 
     # ------------------------------------------------------------- serving
     def process_pending(self, backend: str = "jnp") -> List[Decision]:
@@ -154,6 +193,11 @@ class SelectorService:
             self._execute_bucket([(batch[i], decisions[i]) for i in members],
                                  backend)
         self._counts["buckets"] += len(buckets)
+        # Serving-loop retraining tick (ROADMAP follow-up): fold the verify
+        # feedback buffer into the tuner tree every ``refit_every`` ticks.
+        self._counts["ticks"] += 1
+        if self.refit_every and self._counts["ticks"] % self.refit_every == 0:
+            self.refit(min_examples=self.refit_min_examples)
         return decisions
 
     def run(self, backend: str = "jnp") -> List[Decision]:
@@ -186,8 +230,14 @@ class SelectorService:
             x = np.asarray(req.x)
             groups.setdefault((x.ndim,) + x.shape[1:], []).append((req, dec))
         for grp in groups.values():
+            # member_keys: _decide already hashed every request's matrix
+            # (content_key memo), so the bucket store key reuses those
+            # instead of paying a second O(nnz) hashing pass per tick
+            mks = [req.ck for req, _ in grp]
             bucket_plan = plan_bucket("spmv", [req.csr for req, _ in grp],
-                                      grp[0][1].schedule, backend=backend)
+                                      grp[0][1].schedule, backend=backend,
+                                      store=self.prepared_store,
+                                      member_keys=(mks if all(mks) else None))
             ys = bucket_plan.execute([req.x for req, _ in grp])
             self._counts["stacked_launches"] += 1
             for (req, dec), y in zip(grp, ys):
@@ -235,4 +285,10 @@ class SelectorService:
         store = self.cache.telemetry()
         for k in ("entries", "collisions", "evictions"):
             out[f"cache_{k}"] = store[k]
+        # prepared-operand cache telemetry (DESIGN.md §9), next to the
+        # schedule-cache counters: host prep skipped vs paid, bytes pinned.
+        prep = self.prepared_store.telemetry()
+        for k in ("entries", "hits", "misses", "evictions", "bytes_in_use",
+                  "hit_rate"):
+            out[f"prep_{k}"] = prep[k]
         return out

@@ -15,17 +15,24 @@ safe); ``plan`` resolves a Schedule explicitly, through a fitted
 carries the resolved schedule, selection provenance, and a jitted launch.
 The op registry (``register_op``) covers spmv/spmm/spgemm/spadd/moe_gmm/
 flash_attention; legacy per-kernel entry points delegate here.
+
+The zero-rebuild serving path (DESIGN.md §9): ``plan(..., store=
+PreparedStore())`` caches finished device-resident operands keyed by exact
+matrix bytes + schedule, so repeat traffic skips host prep entirely, and
+prepared containers are padded to power-of-two-ish shape-bucket edges so
+differing matrices reuse one compiled executor instead of retracing.
 """
 from . import ops_builtin  # noqa: F401  (registers the built-in ops)
 from .ops_builtin import moe_tile_schedule, route_and_pad
 from .plan import (Plan, launch_count, plan, plan_bucket, reset_counters,
                    trace_count)
+from .prepared import PreparedStore, bucket_edge, content_key
 from .registry import OpSpec, get_op, list_ops, register_op
 from .tensor import LAYOUT_FIELDS, SparseMeta, SparseTensor
 
 __all__ = [
-    "LAYOUT_FIELDS", "OpSpec", "Plan", "SparseMeta", "SparseTensor",
-    "get_op", "launch_count", "list_ops", "moe_tile_schedule", "plan",
-    "plan_bucket", "register_op", "reset_counters", "route_and_pad",
-    "trace_count",
+    "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore", "SparseMeta",
+    "SparseTensor", "bucket_edge", "content_key", "get_op", "launch_count",
+    "list_ops", "moe_tile_schedule", "plan", "plan_bucket", "register_op",
+    "reset_counters", "route_and_pad", "trace_count",
 ]

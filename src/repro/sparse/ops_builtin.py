@@ -1,4 +1,4 @@
-"""Built-in op registrations of the plan/execute facade (DESIGN.md §8).
+"""Built-in op registrations of the plan/execute facade (DESIGN.md §8-§9).
 
 Registered ops: ``spmv`` / ``spmm`` / ``spgemm`` / ``spadd`` / ``moe_gmm`` /
 ``flash_attention``. Each planner resolves operands into device pytrees
@@ -8,16 +8,28 @@ shared across every plan with the same (schedule, backend, shapes), which
 is exactly the schedule-bucket compile-key property the selector batches
 around.
 
-``spmv``/``spmm`` also register bucket planners: a whole same-schedule
-bucket is padded to common shapes, stacked along a leading axis, and run as
-ONE vmapped jitted launch. The executors bump ``plan.trace_count`` when a
-program actually retraces, so tests can assert a bucket compiles once and
-launches once.
+The zero-rebuild serving path (DESIGN.md §9) rides on two hooks threaded
+through every planner:
+
+* ``store`` — a ``PreparedStore``; a warm hit returns the finished
+  device-resident operands (prepared ``SparseTensor``, staged spgemm/spadd
+  symbolic products, stacked bucket arrays) and skips host prep entirely.
+* ``shape_bucket`` (default on) — prepared containers are padded up to
+  power-of-two-ish bucket edges so differing matrices present identical
+  leaf shapes + static meta to the jitted executors: one compiled program
+  serves the whole shape bucket instead of retracing per matrix.
+
+All four bsr ops register bucket planners: a whole same-schedule bucket is
+padded to common (edge-rounded) shapes, stacked along a leading axis, and
+run as ONE jitted launch — vmapped on the jnp backend, the per-member
+kernel schedule unrolled inside one program on interpret/pallas. The
+executors bump ``plan.trace_count`` when a program actually retraces, so
+tests can assert a bucket compiles once and launches once.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,10 +54,19 @@ from ..kernels.moe_gmm.kernel import moe_gmm_pallas
 from ..kernels.moe_gmm.ops import route_and_pad  # noqa: F401  (facade re-export)
 from ..kernels.moe_gmm.ref import ref_gmm
 from .plan import Plan, _bump_trace
+from .prepared import PreparedStore, array_key, bucket_edge, content_key
 from .registry import register_op
 from .tensor import SparseTensor
 
 MATVEC_LAYOUTS = ("ell", "sell", "dense")
+
+
+def _cached(store: Optional[PreparedStore], key, builder):
+    """Route a host-prep build through the PreparedStore when one is in
+    play (``key=None`` marks an uncacheable operand)."""
+    if store is None:
+        return builder()
+    return store.get_or_build(key, builder)
 
 
 # ---------------------------------------------------------------------------
@@ -111,13 +132,24 @@ def _plan_matvec(operands, schedule: Optional[Schedule], backend: str, *,
                  op: str, rhs_tile: Optional[int] = None,
                  block_size: int = 128, layout: str = "ell",
                  slice_height: int = 8, sigma: int = SELL_SIGMA,
-                 max_blocks: Optional[int] = None, **_) -> Plan:
+                 max_blocks: Optional[int] = None,
+                 store: Optional[PreparedStore] = None,
+                 shape_bucket: bool = True,
+                 operand_key: Optional[str] = None, **_) -> Plan:
     (a,) = operands
     if isinstance(a, CSR):
-        st = SparseTensor.from_csr(a, schedule=schedule, block_size=block_size,
-                                   layout=None if layout == "ell" else layout,
-                                   slice_height=slice_height, sigma=sigma,
-                                   max_blocks=max_blocks)
+        lay = None if layout == "ell" else layout
+        sched = (schedule if schedule is not None
+                 else SparseTensor.default_schedule(block_size, lay,
+                                                   slice_height))
+        # operand_key: the selector already hashed the matrix bytes for its
+        # fingerprint memo — reuse it instead of a second O(nnz) sha1 pass
+        key = None if store is None else (
+            "matvec", operand_key or content_key(a), sched, lay, sigma,
+            max_blocks, bool(shape_bucket))
+        st = _cached(store, key, lambda: SparseTensor.from_csr(
+            a, schedule=sched, layout=lay, slice_height=slice_height,
+            sigma=sigma, max_blocks=max_blocks, shape_bucket=shape_bucket))
     else:
         st = SparseTensor.wrap(a, schedule)
     if st.layout not in MATVEC_LAYOUTS:
@@ -126,10 +158,25 @@ def _plan_matvec(operands, schedule: Optional[Schedule], backend: str, *,
     sched = schedule if schedule is not None else st.meta.schedule
     tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
                                                   else 8)
+    true_rows, true_cols = st.true_shape
+    pad_rows, pad_cols = st.meta.shape
 
     def run(x):
-        return _exec_matvec(st, jnp.asarray(x), backend=backend,
-                            rhs_tile=tile)
+        # Bucketed operands: pad the RHS to the bucketed column count
+        # OUTSIDE the traced program, so every matrix in a shape bucket
+        # presents an identical input signature to the jit cache. The pad
+        # stays on device (eager .at[].set) — no host round-trip for
+        # device-resident serving inputs.
+        if getattr(x, "ndim", None) is None:
+            x = np.asarray(x, np.float32)
+        if x.shape[0] != pad_cols:
+            if x.shape[0] != true_cols:
+                raise ValueError(f"{op}: runtime input leading dim "
+                                 f"{x.shape[0]} != operand cols {true_cols}")
+            x = jnp.zeros((pad_cols,) + tuple(x.shape[1:]), jnp.float32) \
+                .at[:true_cols].set(jnp.asarray(x, jnp.float32))
+        y = _exec_matvec(st, jnp.asarray(x), backend=backend, rhs_tile=tile)
+        return y[:true_rows] if true_rows != pad_rows else y
 
     return Plan(op=op, schedule=sched, backend=backend, _run=run,
                 operands=(st,))
@@ -200,12 +247,17 @@ def _exec_matvec_stacked(arrays, xs: jax.Array, layout: str,
     return y.reshape(y.shape[0], -1)
 
 
-def _stack_pad(mats: Sequence[np.ndarray], fill) -> np.ndarray:
+def _stack_pad(mats: Sequence[np.ndarray], fill,
+               edge_dims: Tuple[int, ...] = ()) -> np.ndarray:
     """Stack host arrays along a new axis 0, padding each to the common max
-    shape with ``fill`` (scalar or per-member list)."""
-    shape = tuple(max(m.shape[d] for m in mats) for d in range(mats[0].ndim))
+    shape with ``fill`` (scalar or per-member list). Dims listed in
+    ``edge_dims`` are additionally rounded up to bucket edges so repeat
+    buckets with nearby member sizes share one stacked jit key."""
+    shape = [max(m.shape[d] for m in mats) for d in range(mats[0].ndim)]
+    for d in edge_dims:
+        shape[d] = bucket_edge(shape[d])
     fills = fill if isinstance(fill, (list, tuple)) else [fill] * len(mats)
-    out = np.stack([np.full(shape, f, dtype=mats[0].dtype)
+    out = np.stack([np.full(tuple(shape), f, dtype=mats[0].dtype)
                     for f in fills])
     for i, m in enumerate(mats):
         out[(i,) + tuple(slice(0, s) for s in m.shape)] = m
@@ -228,9 +280,35 @@ def _bucket_hosts(members: List, schedule: Schedule, sigma: int) -> List:
     return hosts
 
 
-def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
-                        op: str = "spmv", rhs_tile: Optional[int] = None,
-                        sigma: int = SELL_SIGMA, **_) -> Plan:
+def _members_key(kind: str, members: List, schedule: Schedule,
+                 extra: Tuple = (),
+                 member_keys: Optional[Sequence[str]] = None
+                 ) -> Optional[Tuple]:
+    """Store key for a bucket of CSR members (None = uncacheable member).
+
+    ``member_keys`` lets a caller that already hashed its matrices (the
+    SelectorService memoizes ``content_key`` per request) skip the second
+    O(nnz) hashing pass; one key per member operand, in member order.
+    """
+    keys = []
+    ki = iter(member_keys) if member_keys is not None else None
+    for m in members:
+        parts = m if isinstance(m, (tuple, list)) else (m,)
+        for p in parts:
+            if ki is not None:
+                k = next(ki, None)
+                if k is None:
+                    return None
+                keys.append(k)
+            elif isinstance(p, CSR):
+                keys.append(content_key(p))
+            else:
+                return None
+    return (kind, schedule) + extra + (tuple(keys),)
+
+
+def _build_matvec_bucket(members: List, schedule: Schedule, sigma: int,
+                         shape_bucket: bool):
     hosts = _bucket_hosts(members, schedule, sigma)
     kinds = {("dense" if isinstance(h, np.ndarray) else
               "sell" if isinstance(h, SELLBSR) else "ell") for h in hosts}
@@ -238,13 +316,19 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
         raise ValueError(f"bucket mixes layouts {sorted(kinds)}; a bucket "
                          "shares one Schedule by construction")
     layout = kinds.pop()
-    shapes = [h.shape for h in hosts]
-    tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
-                                                  else 8)
+    # True (unbucketed) output shapes: a SparseTensor member may itself be
+    # shape-bucketed, in which case its host container carries the padded
+    # shape and ``true_shape`` the logical one.
+    shapes = [m.true_shape if isinstance(m, SparseTensor) else h.shape
+              for m, h in zip(members, hosts)]
+    ed = (0,) if shape_bucket else ()
+    ed2 = (0, 1) if shape_bucket else ()
     if layout == "dense":
         arrays = {"dense": jnp.asarray(_stack_pad(
-            [np.asarray(h, np.float32) for h in hosts], 0.0))}
+            [np.asarray(h, np.float32) for h in hosts], 0.0,
+            edge_dims=ed2))}
         bs = schedule.block_size
+        width = int(arrays["dense"].shape[2])
     else:
         bs = hosts[0].block_size
         # Per-member pad slots must keep pointing at that member's own
@@ -253,19 +337,23 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
         if layout == "ell":
             arrays = {
                 "block_indices": jnp.asarray(_stack_pad(
-                    [h.block_indices for h in hosts], zero_idx)),
+                    [h.block_indices for h in hosts], zero_idx,
+                    edge_dims=ed2)),
                 "block_cols": jnp.asarray(_stack_pad(
-                    [h.block_cols for h in hosts], 0)),
+                    [h.block_cols for h in hosts], 0, edge_dims=ed2)),
                 "blocks": jnp.asarray(_stack_pad(
-                    [h.blocks.astype(np.float32) for h in hosts], 0.0)),
+                    [h.blocks.astype(np.float32) for h in hosts], 0.0,
+                    edge_dims=ed)),
             }
         else:
             n_br = max(h.n_block_rows for h in hosts)
+            if shape_bucket:
+                n_br = bucket_edge(n_br)
             arrays = {
                 "cell_block": jnp.asarray(_stack_pad(
-                    [h.cell_block for h in hosts], zero_idx)),
+                    [h.cell_block for h in hosts], zero_idx, edge_dims=ed)),
                 "cell_col": jnp.asarray(_stack_pad(
-                    [h.cell_col for h in hosts], 0)),
+                    [h.cell_col for h in hosts], 0, edge_dims=ed)),
                 # pad cells extend the member's LAST sorted row (+0 from the
                 # zero block), keeping cell_row nondecreasing — the Pallas
                 # output-residency contract; padding with row 0 would
@@ -273,7 +361,7 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
                 "cell_row": jnp.asarray(_stack_pad(
                     [h.cell_row for h in hosts],
                     [int(h.cell_row[-1]) if h.cell_row.size else 0
-                     for h in hosts])),
+                     for h in hosts], edge_dims=ed)),
                 # identity-extend each member's permutation so padded sorted
                 # rows scatter onto padded (sliced-away) output rows
                 "row_perm": jnp.asarray(np.stack([
@@ -282,15 +370,36 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
                                               dtype=np.int32)])
                     for h in hosts])),
                 "blocks": jnp.asarray(_stack_pad(
-                    [h.blocks.astype(np.float32) for h in hosts], 0.0)),
+                    [h.blocks.astype(np.float32) for h in hosts], 0.0,
+                    edge_dims=ed)),
             }
+        n_bc = -(-max(h.shape[1] for h in hosts) // bs)
+        if shape_bucket:
+            n_bc = bucket_edge(n_bc)
+        width = n_bc * bs
+    return {"arrays": arrays, "shapes": shapes, "layout": layout,
+            "bs": bs, "width": width}
 
-    n_cols_max = max(s[1] for s in shapes)
-    n_bc = -(-n_cols_max // bs) if layout != "dense" else None
+
+def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
+                        op: str = "spmv", rhs_tile: Optional[int] = None,
+                        sigma: int = SELL_SIGMA,
+                        store: Optional[PreparedStore] = None,
+                        shape_bucket: bool = True,
+                        member_keys=None, **_) -> Plan:
+    key = None if store is None else _members_key(
+        "matvec_bucket", members, schedule,
+        extra=(op, sigma, bool(shape_bucket)), member_keys=member_keys)
+    built = _cached(store, key, lambda: _build_matvec_bucket(
+        members, schedule, sigma, shape_bucket))
+    arrays, shapes = built["arrays"], built["shapes"]
+    layout, width = built["layout"], built["width"]
+    tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
+                                                  else 8)
 
     def run(xs):
-        if len(xs) != len(hosts):
-            raise ValueError(f"bucket has {len(hosts)} members, got "
+        if len(xs) != len(shapes):
+            raise ValueError(f"bucket has {len(shapes)} members, got "
                              f"{len(xs)} runtime inputs")
         xs = [np.asarray(x, np.float32) for x in xs]
         sigs = {(x.ndim,) + x.shape[1:] for x in xs}
@@ -300,10 +409,6 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
                 f"{sorted(sigs)}; split the bucket by RHS signature "
                 "(SelectorService does this automatically)")
         multi = xs[0].ndim == 2
-        if layout == "dense":
-            width = arrays["dense"].shape[2]
-        else:
-            width = n_bc * bs
         if multi:
             k = xs[0].shape[1]
             k_pad = -(-k // tile) * tile
@@ -322,7 +427,7 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
         return [ys[i, : shapes[i][0]] for i in range(len(xs))]
 
     return Plan(op=op, schedule=schedule, backend=backend, _run=run,
-                operands=tuple(hosts), n_members=len(hosts))
+                n_members=len(shapes))
 
 
 # ---------------------------------------------------------------------------
@@ -348,13 +453,122 @@ def _exec_spgemm_cells(cell_a, cell_b, cell_c, a_blocks, b_blocks, n_c: int,
                                    n_c, interpret=(backend == "interpret"))
 
 
-def _with_zero_block(blocks: np.ndarray, bs: int) -> jax.Array:
-    return jnp.asarray(np.concatenate(
-        [blocks.astype(np.float32), np.zeros((1, bs, bs), np.float32)]))
+def _with_zero_block(blocks: np.ndarray, bs: int) -> np.ndarray:
+    return np.concatenate(
+        [blocks.astype(np.float32), np.zeros((1, bs, bs), np.float32)])
+
+
+def _pad_rows(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    """Pad axis 0 of a host array to ``n`` rows with ``fill``."""
+    if arr.shape[0] >= n:
+        return arr
+    out = np.full((n,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def _as_bsr(a, bs: int, op: str) -> BSR:
+    """Coerce a spgemm/spadd operand — CSR, prepared BSR container, or a
+    bsr-layout SparseTensor — to the raw blocked form the symbolic phase
+    consumes, validating the block size against the schedule's."""
+    if isinstance(a, SparseTensor):
+        if a.layout != "bsr":
+            raise ValueError(f"{op} operands must be raw blocked (bsr) "
+                             f"SparseTensors, got layout {a.layout!r}")
+        a = a.to_host()
+    if isinstance(a, BSR):
+        if a.block_size != bs:
+            raise ValueError(f"{op} operand was prepared with block_size "
+                             f"{a.block_size}, schedule wants {bs}")
+        return a
+    return BSR.from_csr(a, bs)
+
+
+def _spgemm_host_products(a, b, schedule: Schedule):
+    """Host symbolic products + sentinel-extended block arrays (numpy) —
+    shared by the single-plan prepare and the stacked bucket build."""
+    bs = schedule.block_size
+    bsr_a = _as_bsr(a, bs, "spgemm")
+    bsr_b = _as_bsr(b, bs, "spgemm")
+    zero_a, zero_b = bsr_a.n_blocks, bsr_b.n_blocks
+    a_bl = _with_zero_block(bsr_a.blocks, bs)
+    b_bl = _with_zero_block(bsr_b.blocks, bs)
+    if schedule.layout == "sell":
+        c_ptrs, c_cols, ca, cb, cc = spgemm_symbolic_cells(bsr_a, bsr_b)
+        return {"mode": "cells", "c_ptrs": c_ptrs, "c_cols": c_cols,
+                "cell_a": ca, "cell_b": cb, "cell_c": cc,
+                "a_blocks": a_bl, "b_blocks": b_bl,
+                "zero_a": zero_a, "zero_b": zero_b,
+                "n_c": int(c_cols.size),
+                "out_shape": (a.shape[0], b.shape[1]), "bs": bs}
+    c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(bsr_a, bsr_b)
+    return {"mode": "pairs", "c_ptrs": c_ptrs, "c_cols": c_cols,
+            "pair_a": pair_a, "pair_b": pair_b,
+            "a_blocks": a_bl, "b_blocks": b_bl,
+            "zero_a": zero_a, "zero_b": zero_b,
+            "n_c": int(c_cols.size),
+            "out_shape": (a.shape[0], b.shape[1]), "bs": bs}
+
+
+def _prepare_spgemm(a, b, schedule: Schedule,
+                    store: Optional[PreparedStore], shape_bucket: bool,
+                    operand_key: Optional[str] = None):
+    """Device-staged (and optionally bucket-padded) spgemm symbolic-phase
+    products; cached in the PreparedStore keyed by exact matrix bytes."""
+    key = None
+    if store is not None and isinstance(a, CSR) and isinstance(b, CSR):
+        key = ("spgemm", schedule.block_size, schedule.layout,
+               bool(shape_bucket), operand_key or content_key(a),
+               content_key(b))
+    return _cached(store, key,
+                   lambda: _build_spgemm(a, b, schedule, shape_bucket))
+
+
+def _build_spgemm(a, b, schedule: Schedule, shape_bucket: bool):
+    h = _spgemm_host_products(a, b, schedule)
+    n_c, bs = h["n_c"], h["bs"]
+    if h["mode"] == "cells":
+        ca, cb, cc = h["cell_a"], h["cell_b"], h["cell_c"]
+        n_c_pad = n_c
+        if shape_bucket:
+            n_cells_p = bucket_edge(ca.size)
+            n_c_pad = bucket_edge(n_c)
+            ca = _pad_rows(ca, n_cells_p, h["zero_a"])
+            cb = _pad_rows(cb, n_cells_p, h["zero_b"])
+            cc = _pad_rows(cc, n_cells_p, max(n_c - 1, 0))
+            h["a_blocks"] = _pad_rows(h["a_blocks"],
+                                      bucket_edge(h["a_blocks"].shape[0]), 0.0)
+            h["b_blocks"] = _pad_rows(h["b_blocks"],
+                                      bucket_edge(h["b_blocks"].shape[0]), 0.0)
+        dev = (jnp.asarray(ca), jnp.asarray(cb), jnp.asarray(cc),
+               jnp.asarray(h["a_blocks"]), jnp.asarray(h["b_blocks"]))
+        prep = {"mode": "cells", "dev": dev, "n_c_pad": n_c_pad}
+    else:
+        pa, pb = h["pair_a"], h["pair_b"]
+        if shape_bucket and pa.size:
+            n_c_p, mp_p = bucket_edge(pa.shape[0]), bucket_edge(pa.shape[1])
+            pa2 = np.full((n_c_p, mp_p), h["zero_a"], np.int32)
+            pa2[: pa.shape[0], : pa.shape[1]] = pa
+            pb2 = np.full((n_c_p, mp_p), h["zero_b"], np.int32)
+            pb2[: pb.shape[0], : pb.shape[1]] = pb
+            pa, pb = pa2, pb2
+            h["a_blocks"] = _pad_rows(h["a_blocks"],
+                                      bucket_edge(h["a_blocks"].shape[0]), 0.0)
+            h["b_blocks"] = _pad_rows(h["b_blocks"],
+                                      bucket_edge(h["b_blocks"].shape[0]), 0.0)
+        dev = (jnp.asarray(pa), jnp.asarray(pb),
+               jnp.asarray(h["a_blocks"]), jnp.asarray(h["b_blocks"]))
+        prep = {"mode": "pairs", "dev": dev, "n_c_pad": n_c}
+    prep.update({"c_ptrs": h["c_ptrs"], "c_cols": h["c_cols"], "n_c": n_c,
+                 "out_shape": h["out_shape"], "bs": bs})
+    return prep
 
 
 def _plan_spgemm(operands, schedule: Optional[Schedule], backend: str, *,
-                 block_size: int = 128, **_) -> Plan:
+                 block_size: int = 128,
+                 store: Optional[PreparedStore] = None,
+                 shape_bucket: bool = True,
+                 operand_key: Optional[str] = None, **_) -> Plan:
     a, b = operands
     if schedule is None:
         schedule = Schedule("bsr", block_size, 1.0)
@@ -363,39 +577,171 @@ def _plan_spgemm(operands, schedule: Optional[Schedule], backend: str, *,
                          "dense matmul instead")
     if a.shape[1] != b.shape[0]:
         raise ValueError(f"inner dims mismatch {a.shape} @ {b.shape}")
-    bs = schedule.block_size
-    bsr_a, bsr_b = BSR.from_csr(a, bs), BSR.from_csr(b, bs)
-    out_shape = (a.shape[0], b.shape[1])
+    prep = _prepare_spgemm(a, b, schedule, store, shape_bucket, operand_key)
+    n_c, bs = prep["n_c"], prep["bs"]
 
-    if schedule.layout == "sell":
-        c_ptrs, c_cols, ca, cb, cc = spgemm_symbolic_cells(bsr_a, bsr_b)
-        n_c = int(c_cols.size)
-        dev = (jnp.asarray(ca), jnp.asarray(cb), jnp.asarray(cc),
-               jnp.asarray(bsr_a.blocks, jnp.float32),
-               jnp.asarray(bsr_b.blocks, jnp.float32))
-
+    if prep["mode"] == "cells":
         def run():
             if n_c == 0:
                 c_blocks = np.zeros((0, bs, bs), np.float32)
             else:
                 c_blocks = np.asarray(_exec_spgemm_cells(
-                    *dev, n_c=n_c, backend=backend))
-            return BSR(c_ptrs, c_cols, c_blocks, out_shape, bs)
+                    *prep["dev"], n_c=prep["n_c_pad"], backend=backend))[:n_c]
+            return BSR(prep["c_ptrs"], prep["c_cols"], c_blocks,
+                       prep["out_shape"], bs)
     else:
-        c_ptrs, c_cols, pair_a, pair_b = spgemm_symbolic(bsr_a, bsr_b)
-        dev = (jnp.asarray(pair_a), jnp.asarray(pair_b),
-               _with_zero_block(bsr_a.blocks, bs),
-               _with_zero_block(bsr_b.blocks, bs))
-
         def run():
-            if pair_a.shape[0] == 0:
+            if n_c == 0:
                 c_blocks = np.zeros((0, bs, bs), np.float32)
             else:
                 c_blocks = np.asarray(_exec_spgemm_pairs(
-                    *dev, backend=backend))
-            return BSR(c_ptrs, c_cols, c_blocks, out_shape, bs)
+                    *prep["dev"], backend=backend))[:n_c]
+            return BSR(prep["c_ptrs"], prep["c_cols"], c_blocks,
+                       prep["out_shape"], bs)
 
     return Plan(op="spgemm", schedule=schedule, backend=backend, _run=run)
+
+
+# ---------------------------------------------------------------------------
+# spgemm / spadd — stacked bucket launches (ROADMAP follow-up closed)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exec_spgemm_stacked(pair_a, pair_b, a_blocks, b_blocks, backend: str):
+    """One device program for a whole spgemm bucket (padded-pairs mode)."""
+    _bump_trace("spgemm_stacked")
+    if backend == "jnp":
+        def one(pa, pb, ab, bb):
+            return jnp.einsum("kpab,kpbc->kac", ab[pa], bb[pb])
+        return jax.vmap(one)(pair_a, pair_b, a_blocks, b_blocks)
+    interpret = backend == "interpret"
+    return jnp.stack([
+        bsr_spgemm_pallas(pair_a[i], pair_b[i], a_blocks[i], b_blocks[i],
+                          interpret=interpret)
+        for i in range(pair_a.shape[0])])
+
+
+@functools.partial(jax.jit, static_argnames=("n_c", "backend"))
+def _exec_spgemm_cells_stacked(cell_a, cell_b, cell_c, a_blocks, b_blocks,
+                               n_c: int, backend: str):
+    """One device program for a whole spgemm bucket (flat-cells mode)."""
+    _bump_trace("spgemm_stacked")
+    if backend == "jnp":
+        def one(ca, cb, cc, ab, bb):
+            prods = jnp.einsum("tab,tbc->tac", ab[ca], bb[cb])
+            return jax.ops.segment_sum(prods, cc, num_segments=n_c)
+        return jax.vmap(one)(cell_a, cell_b, cell_c, a_blocks, b_blocks)
+    interpret = backend == "interpret"
+    return jnp.stack([
+        bsr_spgemm_cells_pallas(cell_a[i], cell_b[i], cell_c[i], a_blocks[i],
+                                b_blocks[i], n_c, interpret=interpret)
+        for i in range(cell_a.shape[0])])
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exec_spadd_stacked(ia, ib, a_blocks, b_blocks, backend: str):
+    """One device program for a whole spadd bucket (block gather-add)."""
+    _bump_trace("spadd_stacked")
+    if backend == "jnp":
+        return jax.vmap(lambda i1, i2, ab, bb: ab[i1] + bb[i2])(
+            ia, ib, a_blocks, b_blocks)
+    interpret = backend == "interpret"
+    return jnp.stack([
+        bsr_spadd_pallas(ia[i], ib[i], a_blocks[i], b_blocks[i],
+                         interpret=interpret)
+        for i in range(ia.shape[0])])
+
+
+def _pair_members(members: List, op: str) -> List[Tuple[CSR, CSR]]:
+    pairs = []
+    for i, m in enumerate(members):
+        if not (isinstance(m, (tuple, list)) and len(m) == 2):
+            raise ValueError(f"{op} bucket members are (A, B) operand "
+                             f"pairs; member {i} is {type(m).__name__}")
+        pairs.append((m[0], m[1]))
+    return pairs
+
+
+def _plan_spgemm_bucket(members: List, schedule: Schedule, backend: str, *,
+                        store: Optional[PreparedStore] = None,
+                        shape_bucket: bool = True,
+                        member_keys=None, **_) -> Plan:
+    """ONE stacked launch for a same-schedule spgemm bucket: per-member
+    symbolic products are padded to common (edge-rounded) shapes, stacked
+    along a member axis, and the numeric phase runs as a single device
+    program; results are sliced back per member."""
+    if schedule.backend == "dense":
+        raise ValueError("dense schedules have no BSR path")
+    pairs = _pair_members(members, "spgemm")
+    for i, (a, b) in enumerate(pairs):
+        if a.shape[1] != b.shape[0]:
+            raise ValueError(f"bucket member {i}: inner dims mismatch "
+                             f"{a.shape} @ {b.shape}")
+    key = None if store is None else _members_key(
+        "spgemm_bucket", members, schedule, extra=(bool(shape_bucket),),
+        member_keys=member_keys)
+    ed = (0,) if shape_bucket else ()
+
+    def build():
+        hs = [_spgemm_host_products(a, b, schedule) for a, b in pairs]
+        mode = hs[0]["mode"]
+        if mode == "cells":
+            stacked = {
+                "cell_a": jnp.asarray(_stack_pad(
+                    [h["cell_a"] for h in hs], [h["zero_a"] for h in hs],
+                    edge_dims=ed)),
+                "cell_b": jnp.asarray(_stack_pad(
+                    [h["cell_b"] for h in hs], [h["zero_b"] for h in hs],
+                    edge_dims=ed)),
+                # pad cells accumulate zero products onto the member's LAST
+                # output block, keeping cell_c nondecreasing
+                "cell_c": jnp.asarray(_stack_pad(
+                    [h["cell_c"] for h in hs],
+                    [max(h["n_c"] - 1, 0) for h in hs], edge_dims=ed)),
+            }
+            n_c_pad = max(h["n_c"] for h in hs)
+            if shape_bucket:
+                n_c_pad = bucket_edge(n_c_pad)
+        else:
+            stacked = {
+                "pair_a": jnp.asarray(_stack_pad(
+                    [h["pair_a"] for h in hs], [h["zero_a"] for h in hs],
+                    edge_dims=(0, 1) if shape_bucket else ())),
+                "pair_b": jnp.asarray(_stack_pad(
+                    [h["pair_b"] for h in hs], [h["zero_b"] for h in hs],
+                    edge_dims=(0, 1) if shape_bucket else ())),
+            }
+            n_c_pad = 0
+        stacked["a_blocks"] = jnp.asarray(_stack_pad(
+            [h["a_blocks"] for h in hs], 0.0, edge_dims=ed))
+        stacked["b_blocks"] = jnp.asarray(_stack_pad(
+            [h["b_blocks"] for h in hs], 0.0, edge_dims=ed))
+        return {"mode": mode, "stacked": stacked, "n_c_pad": n_c_pad,
+                "c_ptrs": [h["c_ptrs"] for h in hs],
+                "c_cols": [h["c_cols"] for h in hs],
+                "n_c": [h["n_c"] for h in hs],
+                "out_shapes": [h["out_shape"] for h in hs],
+                "bs": hs[0]["bs"]}
+
+    built = _cached(store, key, build)
+    st, bs = built["stacked"], built["bs"]
+
+    def run():
+        if built["mode"] == "cells":
+            cs = _exec_spgemm_cells_stacked(
+                st["cell_a"], st["cell_b"], st["cell_c"], st["a_blocks"],
+                st["b_blocks"], n_c=built["n_c_pad"], backend=backend)
+        else:
+            cs = _exec_spgemm_stacked(st["pair_a"], st["pair_b"],
+                                      st["a_blocks"], st["b_blocks"],
+                                      backend=backend)
+        blocks = np.asarray(cs)
+        return [BSR(built["c_ptrs"][i], built["c_cols"][i],
+                    blocks[i, : built["n_c"][i]], built["out_shapes"][i], bs)
+                for i in range(len(built["n_c"]))]
+
+    return Plan(op="spgemm", schedule=schedule, backend=backend, _run=run,
+                n_members=len(pairs))
 
 
 # ---------------------------------------------------------------------------
@@ -411,8 +757,54 @@ def _exec_spadd(ia, ib, a_blocks, b_blocks, backend: str):
                             interpret=(backend == "interpret"))
 
 
+def _spadd_host_products(a, b, schedule: Schedule):
+    bs = schedule.block_size
+    bsr_a = _as_bsr(a, bs, "spadd")
+    bsr_b = _as_bsr(b, bs, "spadd")
+    c_ptrs, c_cols, ia, ib = spadd_symbolic(bsr_a, bsr_b)
+    return {"c_ptrs": c_ptrs, "c_cols": c_cols, "ia": ia, "ib": ib,
+            "a_blocks": _with_zero_block(bsr_a.blocks, bs),
+            "b_blocks": _with_zero_block(bsr_b.blocks, bs),
+            "zero_a": bsr_a.n_blocks, "zero_b": bsr_b.n_blocks,
+            "n_c": int(ia.size), "out_shape": a.shape, "bs": bs}
+
+
+def _prepare_spadd(a, b, schedule: Schedule,
+                   store: Optional[PreparedStore], shape_bucket: bool,
+                   operand_key: Optional[str] = None):
+    key = None
+    if store is not None and isinstance(a, CSR) and isinstance(b, CSR):
+        # layout is irrelevant to spadd prep (only block_size is consumed),
+        # so the key deliberately omits it: sell- and ell-schedule plans of
+        # the same block size share one cached entry.
+        key = ("spadd", schedule.block_size, bool(shape_bucket),
+               operand_key or content_key(a), content_key(b))
+    return _cached(store, key,
+                   lambda: _build_spadd(a, b, schedule, shape_bucket))
+
+
+def _build_spadd(a, b, schedule: Schedule, shape_bucket: bool):
+    h = _spadd_host_products(a, b, schedule)
+    ia, ib = h["ia"], h["ib"]
+    if shape_bucket:
+        n_c_p = bucket_edge(h["n_c"])
+        ia = _pad_rows(ia, n_c_p, h["zero_a"])
+        ib = _pad_rows(ib, n_c_p, h["zero_b"])
+        h["a_blocks"] = _pad_rows(h["a_blocks"],
+                                  bucket_edge(h["a_blocks"].shape[0]), 0.0)
+        h["b_blocks"] = _pad_rows(h["b_blocks"],
+                                  bucket_edge(h["b_blocks"].shape[0]), 0.0)
+    return {"dev": (jnp.asarray(ia), jnp.asarray(ib),
+                    jnp.asarray(h["a_blocks"]), jnp.asarray(h["b_blocks"])),
+            "c_ptrs": h["c_ptrs"], "c_cols": h["c_cols"], "n_c": h["n_c"],
+            "out_shape": h["out_shape"], "bs": h["bs"]}
+
+
 def _plan_spadd(operands, schedule: Optional[Schedule], backend: str, *,
-                block_size: int = 128, **_) -> Plan:
+                block_size: int = 128,
+                store: Optional[PreparedStore] = None,
+                shape_bucket: bool = True,
+                operand_key: Optional[str] = None, **_) -> Plan:
     a, b = operands
     if schedule is None:
         schedule = Schedule("bsr", block_size, 1.0)
@@ -421,21 +813,72 @@ def _plan_spadd(operands, schedule: Optional[Schedule], backend: str, *,
                          "dense matmul instead")
     if a.shape != b.shape:
         raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
-    bs = schedule.block_size
-    bsr_a, bsr_b = BSR.from_csr(a, bs), BSR.from_csr(b, bs)
-    c_ptrs, c_cols, ia, ib = spadd_symbolic(bsr_a, bsr_b)
-    dev = (jnp.asarray(ia), jnp.asarray(ib),
-           _with_zero_block(bsr_a.blocks, bs),
-           _with_zero_block(bsr_b.blocks, bs))
+    prep = _prepare_spadd(a, b, schedule, store, shape_bucket, operand_key)
+    n_c, bs = prep["n_c"], prep["bs"]
 
     def run():
-        if ia.size == 0:
+        if n_c == 0:
             c_blocks = np.zeros((0, bs, bs), np.float32)
         else:
-            c_blocks = np.asarray(_exec_spadd(*dev, backend=backend))
-        return BSR(c_ptrs, c_cols, c_blocks, a.shape, bs)
+            c_blocks = np.asarray(_exec_spadd(*prep["dev"],
+                                              backend=backend))[:n_c]
+        return BSR(prep["c_ptrs"], prep["c_cols"], c_blocks,
+                   prep["out_shape"], bs)
 
     return Plan(op="spadd", schedule=schedule, backend=backend, _run=run)
+
+
+def _plan_spadd_bucket(members: List, schedule: Schedule, backend: str, *,
+                       store: Optional[PreparedStore] = None,
+                       shape_bucket: bool = True,
+                       member_keys=None, **_) -> Plan:
+    """ONE stacked launch for a same-schedule spadd bucket."""
+    if schedule.backend == "dense":
+        raise ValueError("dense schedules have no BSR path")
+    pairs = _pair_members(members, "spadd")
+    for i, (a, b) in enumerate(pairs):
+        if a.shape != b.shape:
+            raise ValueError(f"bucket member {i}: shape mismatch "
+                             f"{a.shape} vs {b.shape}")
+    key = None if store is None else _members_key(
+        "spadd_bucket", members, schedule, extra=(bool(shape_bucket),),
+        member_keys=member_keys)
+
+    def build():
+        hs = [_spadd_host_products(a, b, schedule) for a, b in pairs]
+        ed = (0,) if shape_bucket else ()
+        stacked = {
+            "ia": jnp.asarray(_stack_pad(
+                [h["ia"] for h in hs], [h["zero_a"] for h in hs],
+                edge_dims=ed)),
+            "ib": jnp.asarray(_stack_pad(
+                [h["ib"] for h in hs], [h["zero_b"] for h in hs],
+                edge_dims=ed)),
+            "a_blocks": jnp.asarray(_stack_pad(
+                [h["a_blocks"] for h in hs], 0.0, edge_dims=ed)),
+            "b_blocks": jnp.asarray(_stack_pad(
+                [h["b_blocks"] for h in hs], 0.0, edge_dims=ed)),
+        }
+        return {"stacked": stacked,
+                "c_ptrs": [h["c_ptrs"] for h in hs],
+                "c_cols": [h["c_cols"] for h in hs],
+                "n_c": [h["n_c"] for h in hs],
+                "out_shapes": [h["out_shape"] for h in hs],
+                "bs": hs[0]["bs"]}
+
+    built = _cached(store, key, build)
+    st, bs = built["stacked"], built["bs"]
+
+    def run():
+        cs = _exec_spadd_stacked(st["ia"], st["ib"], st["a_blocks"],
+                                 st["b_blocks"], backend=backend)
+        blocks = np.asarray(cs)
+        return [BSR(built["c_ptrs"][i], built["c_cols"][i],
+                    blocks[i, : built["n_c"][i]], built["out_shapes"][i], bs)
+                for i in range(len(built["n_c"]))]
+
+    return Plan(op="spadd", schedule=schedule, backend=backend, _run=run,
+                n_members=len(pairs))
 
 
 # ---------------------------------------------------------------------------
@@ -455,11 +898,14 @@ def _exec_moe(tile_expert, x, w, tile_m: int, tile_n: int, tile_k: int,
 
 def _plan_moe(operands, schedule: Optional[Schedule], backend: str, *,
               tile_m: Optional[int] = None, tile_n: int = 128,
-              tile_k: int = 128, **_) -> Plan:
+              tile_k: int = 128,
+              store: Optional[PreparedStore] = None, **_) -> Plan:
     (tile_expert,) = operands
     tm = tile_m if tile_m is not None else (
         schedule.block_size if schedule is not None else 128)
-    te = jnp.asarray(tile_expert, jnp.int32)
+    key = None if store is None else (
+        "moe_gmm", array_key(np.asarray(tile_expert, np.int32)))
+    te = _cached(store, key, lambda: jnp.asarray(tile_expert, jnp.int32))
 
     def run(x, w):
         return _exec_moe(te, jnp.asarray(x), jnp.asarray(w), tile_m=tm,
@@ -522,27 +968,43 @@ def _plan_flash(operands, schedule: Optional[Schedule], backend: str, *,
 # registrations
 # ---------------------------------------------------------------------------
 
+def _matvec_bucket_layouts(s: Schedule) -> Tuple[str, ...]:
+    return ("dense",) if s.backend == "dense" else (s.layout,)
+
+
+def _pairop_bucket_layouts(s: Schedule) -> Tuple[str, ...]:
+    # spgemm/spadd operands are raw blocked rows whatever the schedule's
+    # ell/sell axis says (that axis picks the numeric formulation).
+    return ("bsr",)
+
+
 register_op(
     "spmv", functools.partial(_plan_matvec, op="spmv"),
     operand_spec="(A: CSR | SparseTensor | ELLBSR/SELLBSR) -> execute(x: (n,))",
     layouts=MATVEC_LAYOUTS,
-    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmv"))
+    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmv"),
+    bucket_layouts=_matvec_bucket_layouts)
 register_op(
     "spmm", functools.partial(_plan_matvec, op="spmm"),
     operand_spec="(A: CSR | SparseTensor) -> execute(X: (n, k))",
     layouts=MATVEC_LAYOUTS,
-    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmm"))
+    bucket_planner=functools.partial(_plan_matvec_bucket, op="spmm"),
+    bucket_layouts=_matvec_bucket_layouts)
 register_op(
     "spgemm", _plan_spgemm,
     operand_spec="(A: CSR, B: CSR) -> execute() -> BSR",
-    layouts=("ell", "sell"), symbolic=spgemm_symbolic)
+    layouts=("ell", "sell"), symbolic=spgemm_symbolic,
+    bucket_planner=_plan_spgemm_bucket,
+    bucket_layouts=_pairop_bucket_layouts)
 # spadd accepts sell-layout schedules (tuner sweeps emit them; the modeled
 # spadd time ignores layout) but executes the block-union path either way —
 # only block_size is consumed, matching the legacy schedule= contract.
 register_op(
     "spadd", _plan_spadd,
     operand_spec="(A: CSR, B: CSR) -> execute() -> BSR",
-    layouts=("ell", "sell"), symbolic=spadd_symbolic)
+    layouts=("ell", "sell"), symbolic=spadd_symbolic,
+    bucket_planner=_plan_spadd_bucket,
+    bucket_layouts=_pairop_bucket_layouts)
 register_op(
     "moe_gmm", _plan_moe,
     operand_spec="(tile_expert: (M/tile_m,)) -> execute(x: (M, K), "

@@ -21,10 +21,14 @@ import dataclasses
 from collections import Counter
 from typing import Callable, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from ..core.autotune import Schedule
-from ..core.csr import CSR
+from ..core.csr import BSR, CSR, ELLBSR, SELLBSR
 from ..kernels.common import resolve_backend
+from .prepared import PreparedStore
 from .registry import get_op
+from .tensor import SparseTensor
 
 _LAUNCHES: "Counter[str]" = Counter()
 _TRACES: "Counter[str]" = Counter()
@@ -91,7 +95,10 @@ class Plan:
 
 
 def _resolve_with_selector(selector, A: CSR):
-    """Schedule + provenance from a SelectorService or a ScheduleTuner."""
+    """(Schedule, provenance, operand content key) from a SelectorService
+    or a ScheduleTuner. The service already hashed the matrix bytes for its
+    fingerprint memo; the key is forwarded so the planner's PreparedStore
+    lookup does not pay a second O(nnz) hashing pass."""
     if not isinstance(A, CSR):
         raise TypeError("selector-based planning needs a CSR first operand, "
                         f"got {type(A).__name__}")
@@ -102,59 +109,114 @@ def _resolve_with_selector(selector, A: CSR):
             "fingerprint_key": dec.fingerprint_key,
             "modeled_time_s": dec.modeled_time_s,
             "confidence": dec.confidence,
-        }
+        }, getattr(dec, "ck", None)
     if hasattr(selector, "select"):               # ScheduleTuner
         schedule, info = selector.select(A)
         return schedule, {
             "source": "tuner",
             "modeled_time_s": info.get("verified_time_s"),
-        }
+        }, None
     raise TypeError(f"unsupported selector {type(selector).__name__}; pass a "
                     "SelectorService or a fitted ScheduleTuner")
 
 
 def plan(op: str, operands, schedule: Optional[Schedule] = None,
-         selector=None, backend: str = "auto", **op_kwargs) -> Plan:
+         selector=None, backend: str = "auto",
+         store: Optional[PreparedStore] = None, **op_kwargs) -> Plan:
     """Build an executable ``Plan`` for a registered sparse op.
 
     Exactly one schedule source applies: an explicit ``schedule``, a
     ``selector`` (``SelectorService`` → cache/tree/verify path, or a fitted
     ``ScheduleTuner`` → tree-argmin + simulation verify), or the op
     planner's defaults.
+
+    ``store`` is a ``PreparedStore``: repeat ``plan()`` traffic for the
+    same (matrix bytes, schedule) pair reuses the finished device-resident
+    operands and skips host prep entirely. When planning through a
+    ``SelectorService`` the service's own prepared store is used unless one
+    is passed explicitly.
     """
     spec = get_op(op)
     if not isinstance(operands, tuple):
         operands = (operands,)
     backend = resolve_backend(backend)
     provenance: Dict[str, object] = {}
+    operand_key = None
+    if selector is not None and store is None:
+        store = getattr(selector, "prepared_store", None)
     if schedule is None and selector is not None:
-        schedule, provenance = _resolve_with_selector(selector, operands[0])
+        schedule, provenance, operand_key = _resolve_with_selector(
+            selector, operands[0])
     if schedule is not None and schedule.backend != "dense" \
             and spec.layouts and schedule.layout not in spec.layouts:
         raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
                          f"schedule asks for {schedule.layout!r}")
+    # only inject serving-path extras when a store is in play AND the
+    # planner declares/accepts them — custom planners registered through
+    # the public register_op API need not know about either kwarg
+    if store is not None and spec.planner_store_ok:
+        op_kwargs = dict(op_kwargs, store=store)
+        if operand_key is not None and spec.planner_operand_key_ok:
+            op_kwargs.setdefault("operand_key", operand_key)
     p = spec.planner(operands, schedule, backend, **op_kwargs)
     for k, v in provenance.items():
         setattr(p, k, v)
     return p
 
 
+def _member_layout(m) -> Optional[str]:
+    """Container layout a bucket member arrives in (None = raw CSR, which
+    every op can prepare into its own layout)."""
+    if isinstance(m, SparseTensor):
+        return m.layout
+    if isinstance(m, ELLBSR):
+        return "ell"
+    if isinstance(m, SELLBSR):
+        return "sell"
+    if isinstance(m, BSR):
+        return "bsr"
+    if isinstance(m, np.ndarray):
+        return "dense"
+    return None
+
+
 def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
-                backend: str = "auto", **op_kwargs) -> Plan:
+                backend: str = "auto",
+                store: Optional[PreparedStore] = None, **op_kwargs) -> Plan:
     """One stacked jitted launch for a whole same-schedule bucket.
 
-    ``operands`` is a list of per-member sparse operands (CSR or prepared);
-    the returned plan's ``execute`` takes the matching list of runtime
-    inputs and returns the per-member outputs — all members through ONE
-    device program.
+    ``operands`` is a list of per-member sparse operands (CSR or prepared;
+    tuples of operands for binary ops like spgemm/spadd); the returned
+    plan's ``execute`` takes the matching list of runtime inputs (none for
+    spgemm/spadd) and returns the per-member outputs — all members through
+    ONE device program. Every member is validated against the bucket's
+    shared Schedule up front, so a mixed or layout-incompatible bucket
+    fails here with a per-member error, not deep inside the stacked build.
     """
     spec = get_op(op)
     if spec.bucket_planner is None:
         raise ValueError(f"op {op!r} has no stacked bucket launch")
     if schedule is None:
         raise ValueError("plan_bucket needs the bucket's shared Schedule")
+    if schedule.backend != "dense" and spec.layouts \
+            and schedule.layout not in spec.layouts:
+        raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
+                         f"bucket schedule asks for {schedule.layout!r}")
     members: List = list(operands)
     if not members:
         raise ValueError("empty bucket")
+    if spec.bucket_layouts is not None:
+        allowed = tuple(spec.bucket_layouts(schedule))
+        for i, m in enumerate(members):
+            for part in (m if isinstance(m, (tuple, list)) else (m,)):
+                got = _member_layout(part)
+                if got is not None and got not in allowed:
+                    raise ValueError(
+                        f"bucket member {i} is a {got!r}-layout operand, "
+                        f"incompatible with op {op!r} under the bucket's "
+                        f"schedule (expected one of {allowed} or raw CSR); "
+                        "buckets share one Schedule by construction")
     backend = resolve_backend(backend)
+    if store is not None and spec.bucket_store_ok:
+        op_kwargs = dict(op_kwargs, store=store)
     return spec.bucket_planner(members, schedule, backend, **op_kwargs)

@@ -1,0 +1,209 @@
+"""Zero-rebuild serving: the device-resident prepared-operand cache.
+
+SpChar's finding is that sparse work is bound by memory latency and poor
+reuse, not FLOPs — and the serving-path analogue one level up is host prep:
+on repeat traffic the facade used to re-run container construction, the
+symbolic phase, and device staging for every ``plan()`` call even when the
+same (matrix, schedule) pair was served moments ago. ``PreparedStore`` is
+the fix: a byte-budgeted LRU keyed by ``(content key, schedule, ...)``
+whose values are finished device-resident products — prepared
+``SparseTensor``s, staged spgemm/spadd symbolic products, stacked bucket
+arrays — so a warm ``plan()`` is a hash plus a dict lookup.
+
+Two key notions live here because they are what make the cache correct and
+what make it pay off:
+
+* ``content_key(csr)`` hashes the exact bytes of the matrix (structure AND
+  values). The selector's ``fingerprint`` deliberately rounds features so
+  near-identical matrices share a schedule; the prepared cache must do the
+  opposite — a cached container embeds the values, so only byte-identical
+  matrices may share an entry.
+* ``bucket_edge(n)`` rounds container dimensions up to power-of-two-ish
+  edges (1x and 1.5x powers of two). Cached operands only skip XLA
+  retracing if their jit cache keys match, and the jit key is the leaf
+  shapes + static meta — so prepared containers are padded up to bucket
+  edges and differing matrices land on identical compiled executors
+  (asserted via ``plan.trace_count``).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.csr import CSR
+
+# Default device-byte budget of a store: enough for serving working sets,
+# small enough that an unbounded stream of distinct matrices cannot pin
+# device memory (the LRU evicts cold entries instead).
+DEFAULT_BYTE_BUDGET = 256 << 20
+
+
+def bucket_edge(n: int) -> int:
+    """Smallest power-of-two-ish edge >= n: 1, 2, 3, 4, 6, 8, 12, 16, ...
+
+    Two mantissa points per octave (1x and 1.5x each power of two) bounds
+    padding waste at 50% worst-case / ~20% expected while collapsing the
+    long tail of distinct container dimensions onto a handful of compile
+    keys — the stable-padded-tile-shape argument of Gale et al. applied to
+    jit cache keys.
+    """
+    n = max(int(n), 1)
+    edge = 1
+    while edge < n:
+        if edge * 3 // 2 >= n and edge * 3 % 2 == 0:
+            return edge * 3 // 2
+        edge *= 2
+    return edge
+
+
+def content_key(csr: CSR) -> str:
+    """Exact-bytes identity of a matrix for the prepared cache.
+
+    Unlike ``selector.fingerprint`` (rounded features: many matrices, one
+    schedule), this key must separate any two matrices whose prepared
+    containers differ — structure or values — so it hashes the raw CSR
+    arrays. O(nnz) but a single sha1 pass, orders of magnitude below the
+    container build it lets a warm hit skip.
+    """
+    h = hashlib.sha1()
+    h.update(f"csr;{csr.shape[0]}x{csr.shape[1]};{csr.nnz};".encode())
+    for arr in (csr.row_ptrs, csr.col_idxs, csr.nnz_vals):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def array_key(arr: np.ndarray) -> str:
+    """Exact-bytes identity of one host array (moe routing tiles etc.)."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha1()
+    h.update(f"arr;{a.shape};{a.dtype};".encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def entry_nbytes(value: Any) -> int:
+    """Device/host bytes held by a cached value (pytree leaves' nbytes)."""
+    return int(sum(getattr(leaf, "nbytes", 0)
+                   for leaf in jax.tree_util.tree_leaves(value)))
+
+
+def _leaves_alive(value: Any) -> bool:
+    """False if any device leaf was deleted out from under the cache (a jit
+    consumer donated the cached buffers); such an entry must be served as a
+    miss and rebuilt, never handed out with dead buffers."""
+    for leaf in jax.tree_util.tree_leaves(value):
+        is_deleted = getattr(leaf, "is_deleted", None)
+        if is_deleted is not None and is_deleted():
+            return False
+    return True
+
+
+class PreparedStore:
+    """Byte-budgeted LRU of finished prepared operands.
+
+    Keys are tuples ``(kind, content_key(s)..., Schedule, prep kwargs)``;
+    values are whatever the planner needs to skip host prep entirely — the
+    store never interprets them beyond byte accounting. Entries larger than
+    the whole budget are rejected (counted, not raised): a single huge
+    matrix must not flush the working set that is getting hits.
+
+    Donation safety: cached values are returned by reference, and the
+    facade's executors never donate operand buffers. A jit consumer that
+    *does* donate cached leaves deletes the underlying device buffers —
+    ``get`` checks leaf liveness on every hit and serves such an entry as
+    a miss (dropped + counted in ``invalidated``) so the caller rebuilds
+    instead of crashing on dead arrays (tests/test_serving_path.py pins
+    this).
+    """
+
+    def __init__(self, byte_budget: int = DEFAULT_BYTE_BUDGET) -> None:
+        self.byte_budget = int(byte_budget)
+        self._entries: "OrderedDict[Tuple, Tuple[Any, int]]" = OrderedDict()
+        self.bytes_in_use = 0
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.evictions = 0
+        self.rejected = 0
+        self.invalidated = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._entries
+
+    def get(self, key: Tuple) -> Optional[Any]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        if not _leaves_alive(entry[0]):
+            # a consumer donated the cached buffers — drop the entry and
+            # serve a miss so the caller rebuilds instead of crashing on
+            # deleted device arrays
+            self._entries.pop(key)
+            self.bytes_in_use -= entry[1]
+            self.invalidated += 1
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry[0]
+
+    def put(self, key: Tuple, value: Any,
+            nbytes: Optional[int] = None) -> bool:
+        nb = entry_nbytes(value) if nbytes is None else int(nbytes)
+        if nb > self.byte_budget:
+            self.rejected += 1
+            return False
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes_in_use -= old[1]
+        self._entries[key] = (value, nb)
+        self.bytes_in_use += nb
+        self.puts += 1
+        while self.bytes_in_use > self.byte_budget and len(self._entries) > 1:
+            _, (_, freed) = self._entries.popitem(last=False)
+            self.bytes_in_use -= freed
+            self.evictions += 1
+        # a lone over-budget survivor cannot happen (rejected above), but an
+        # exactly-at-budget single entry is fine — loop guard keeps >= 1.
+        return True
+
+    def get_or_build(self, key: Optional[Tuple],
+                     builder: Callable[[], Any]) -> Any:
+        """Cached value for ``key``, building (and inserting) on a miss.
+        ``key=None`` bypasses the store entirely (uncacheable operand)."""
+        if key is None:
+            return builder()
+        value = self.get(key)
+        if value is None:
+            value = builder()
+            self.put(key, value)
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes_in_use = 0
+
+    def telemetry(self) -> Dict[str, float]:
+        lookups = self.hits + self.misses
+        return {
+            "entries": float(len(self._entries)),
+            "bytes_in_use": float(self.bytes_in_use),
+            "byte_budget": float(self.byte_budget),
+            "hits": float(self.hits),
+            "misses": float(self.misses),
+            "puts": float(self.puts),
+            "evictions": float(self.evictions),
+            "rejected": float(self.rejected),
+            "invalidated": float(self.invalidated),
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+        }

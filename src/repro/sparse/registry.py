@@ -12,7 +12,26 @@ points delegate here instead of being called directly.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, Optional, Tuple
+
+
+def _accepts_kwarg(fn: Callable, name: str) -> bool:
+    """True if ``fn`` can receive keyword ``name`` (declared or **kwargs).
+    Planners that cannot are simply not offered serving-path extras like
+    ``store=`` — the public register_op contract stays (operands, schedule,
+    backend, **kw-you-care-about)."""
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):
+        return True
+    for p in params:
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            return True
+        if p.name == name and p.kind in (inspect.Parameter.KEYWORD_ONLY,
+                                         inspect.Parameter.POSITIONAL_OR_KEYWORD):
+            return True
+    return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +44,17 @@ class OpSpec:
     layouts: Tuple[str, ...] = ("ell",)   # schedule.layout values supported
     symbolic: Optional[Callable] = None   # host symbolic phase, if the op has one
     bucket_planner: Optional[Callable] = None  # stacked same-schedule launch
+    # Container layouts a bucket member may arrive in for a given Schedule
+    # (Schedule -> tuple of layout names). ``plan_bucket`` validates every
+    # member against this BEFORE the stacked build, so a mixed bucket fails
+    # with a per-member error instead of deep inside the planner.
+    bucket_layouts: Optional[Callable] = None
+    # Whether the (bucket) planner can receive the serving-path ``store=``
+    # / ``operand_key=`` kwargs; computed at registration so
+    # plan()/plan_bucket() never break a planner that does not declare them.
+    planner_store_ok: bool = True
+    planner_operand_key_ok: bool = True
+    bucket_store_ok: bool = True
 
 
 _REGISTRY: Dict[str, OpSpec] = {}
@@ -34,12 +64,18 @@ def register_op(name: str, planner: Callable, *, operand_spec: str = "",
                 layouts: Tuple[str, ...] = ("ell",),
                 symbolic: Optional[Callable] = None,
                 bucket_planner: Optional[Callable] = None,
+                bucket_layouts: Optional[Callable] = None,
                 overwrite: bool = False) -> OpSpec:
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"op {name!r} already registered "
                          "(pass overwrite=True to replace)")
     spec = OpSpec(name, planner, operand_spec, tuple(layouts), symbolic,
-                  bucket_planner)
+                  bucket_planner, bucket_layouts,
+                  planner_store_ok=_accepts_kwarg(planner, "store"),
+                  planner_operand_key_ok=_accepts_kwarg(planner,
+                                                        "operand_key"),
+                  bucket_store_ok=(bucket_planner is not None
+                                   and _accepts_kwarg(bucket_planner, "store")))
     _REGISTRY[name] = spec
     return spec
 

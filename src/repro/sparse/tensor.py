@@ -27,6 +27,7 @@ import numpy as np
 
 from ..core.autotune import SELL_SIGMA, Schedule
 from ..core.csr import BSR, CSR, ELLBSR, SELLBSR, ell_block_cap
+from .prepared import bucket_edge
 
 HostLayout = Union[ELLBSR, SELLBSR, BSR, np.ndarray]
 
@@ -66,6 +67,10 @@ class SparseTensor:
         # Host container cache — intentionally NOT a pytree leaf: it is a
         # construction-side artifact that tracers cannot carry.
         self._host = host
+        # Logical (unbucketed) shape. Shape-bucketed containers carry the
+        # padded shape in ``meta`` (so equal buckets share a jit key) and
+        # the true shape here, outside the pytree, for output slicing.
+        self.true_shape = meta.shape
 
     # -------------------------------------------------------------- pytree
     def tree_flatten(self):
@@ -118,25 +123,42 @@ class SparseTensor:
             mb = ell_block_cap(bsr.blocks_per_row(), schedule.ell_quantile)
         return ELLBSR.from_bsr(bsr, mb)
 
+    @staticmethod
+    def default_schedule(block_size: int = 128, layout: Optional[str] = None,
+                         slice_height: int = 8) -> Schedule:
+        """The Schedule ``from_csr`` assumes when none is given (shared with
+        the planners so a store key can be formed before building)."""
+        if layout == "sell":
+            return Schedule("bsr", block_size, 1.0, layout="sell",
+                            slice_height=slice_height)
+        return Schedule("bsr", block_size, 1.0)
+
     @classmethod
     def from_csr(cls, csr: CSR, schedule: Optional[Schedule] = None, *,
                  block_size: int = 128, layout: Optional[str] = None,
                  slice_height: int = 8, sigma: int = SELL_SIGMA,
-                 max_blocks: Optional[int] = None) -> "SparseTensor":
+                 max_blocks: Optional[int] = None,
+                 shape_bucket: bool = False) -> "SparseTensor":
         """Prepare ``csr`` under ``schedule`` (or the keyword defaults).
 
         ``layout="bsr"`` forces the raw blocked container regardless of the
         schedule's ell/sell axis (spgemm/spadd operands).
+
+        ``shape_bucket=True`` pads the prepared container's dimensions up to
+        power-of-two-ish bucket edges (``prepared.bucket_edge``) so matrices
+        of nearby sizes share one jit cache key; the returned tensor's
+        ``meta.shape`` is the padded shape and ``true_shape`` the logical
+        one (executors slice outputs back outside the traced program).
         """
         if schedule is None:
-            if layout == "sell":
-                schedule = Schedule("bsr", block_size, 1.0, layout="sell",
-                                    slice_height=slice_height)
-            else:
-                schedule = Schedule("bsr", block_size, 1.0)
+            schedule = cls.default_schedule(block_size, layout, slice_height)
         container = cls.build_container(csr, schedule, layout=layout,
                                         sigma=sigma, max_blocks=max_blocks)
-        return cls.from_layout(container, schedule=schedule)
+        if shape_bucket and not isinstance(container, BSR):
+            container = pad_container_to_bucket(container)
+        st = cls.from_layout(container, schedule=schedule)
+        st.true_shape = (int(csr.shape[0]), int(csr.shape[1]))
+        return st
 
     @classmethod
     def from_layout(cls, container: HostLayout,
@@ -231,6 +253,81 @@ class SparseTensor:
             host = np.asarray(a["dense"])
         self._host = host
         return host
+
+
+# --------------------------------------------------------- shape bucketing
+
+def _pad_ell_to_bucket(ell: ELLBSR) -> ELLBSR:
+    """Pad an ELL container's dims (block-rows, slot width, block count,
+    block-columns) up to bucket edges; numerics unchanged — pad slots point
+    at the existing all-zeros block and pad output rows are sliced away."""
+    n_br, mb = ell.block_indices.shape
+    nb = ell.blocks.shape[0]            # includes the trailing zero block
+    bs = ell.block_size
+    zero_idx = nb - 1
+    n_bc = -(-ell.shape[1] // bs)
+    n_br_p, mb_p = bucket_edge(n_br), bucket_edge(mb)
+    nb_p, n_bc_p = bucket_edge(nb), bucket_edge(n_bc)
+    bi = np.full((n_br_p, mb_p), zero_idx, np.int32)
+    bi[:n_br, :mb] = ell.block_indices
+    bc = np.zeros((n_br_p, mb_p), np.int32)
+    bc[:n_br, :mb] = ell.block_cols
+    blocks = np.zeros((nb_p, bs, bs), np.float32)
+    blocks[:nb] = ell.blocks
+    vc = np.zeros(n_br_p, np.int32)
+    vc[:n_br] = ell.valid_counts
+    return ELLBSR(bi, bc, blocks, (n_br_p * bs, n_bc_p * bs), bs, vc)
+
+
+def _pad_sell_to_bucket(sell: SELLBSR) -> SELLBSR:
+    """Pad a SELL container (cells, block-rows, block count, block-columns)
+    up to bucket edges. Pad cells extend the LAST sorted row with zero-block
+    contributions, keeping ``cell_row`` nondecreasing (the Pallas
+    output-residency contract); ``row_perm`` is identity-extended so padded
+    sorted rows scatter onto padded (sliced-away) output rows."""
+    n_cells, n_br = sell.n_cells, sell.n_block_rows
+    nb = sell.blocks.shape[0]           # includes the trailing zero block
+    bs = sell.block_size
+    zero_idx = nb - 1
+    n_bc = -(-sell.shape[1] // bs)
+    n_cells_p, n_br_p = bucket_edge(n_cells), bucket_edge(n_br)
+    nb_p, n_bc_p = bucket_edge(nb), bucket_edge(n_bc)
+    cb = np.full(n_cells_p, zero_idx, np.int32)
+    cb[:n_cells] = sell.cell_block
+    cc = np.zeros(n_cells_p, np.int32)
+    cc[:n_cells] = sell.cell_col
+    last_row = int(sell.cell_row[-1]) if n_cells else 0
+    cr = np.full(n_cells_p, last_row, np.int32)
+    cr[:n_cells] = sell.cell_row
+    perm = np.concatenate([sell.row_perm,
+                           np.arange(n_br, n_br_p, dtype=np.int32)])
+    n_sl = sell.n_slices
+    sw = np.ones(bucket_edge(n_sl), np.int32)   # empty-slice width-1 rule
+    sw[:n_sl] = sell.slice_widths
+    blocks = np.zeros((nb_p, bs, bs), np.float32)
+    blocks[:nb] = sell.blocks
+    return SELLBSR(cb, cc, cr, perm, sw, blocks,
+                   (n_br_p * bs, n_bc_p * bs), bs, sell.slice_height,
+                   sell.sigma)
+
+
+def pad_container_to_bucket(container: HostLayout) -> HostLayout:
+    """Bucket-edge padding rule per layout (no-op for raw BSR, whose exec
+    paths consume symbolic products that are bucketed separately)."""
+    if isinstance(container, ELLBSR):
+        return _pad_ell_to_bucket(container)
+    if isinstance(container, SELLBSR):
+        return _pad_sell_to_bucket(container)
+    if isinstance(container, BSR):
+        return container
+    dense = np.asarray(container, np.float32)
+    r, c = dense.shape
+    r_p, c_p = bucket_edge(r), bucket_edge(c)
+    if (r_p, c_p) == (r, c):
+        return dense
+    out = np.zeros((r_p, c_p), np.float32)
+    out[:r, :c] = dense
+    return out
 
 
 jax.tree_util.register_pytree_node(

@@ -1,0 +1,416 @@
+"""Zero-rebuild serving path (DESIGN.md §9): PreparedStore hit/miss/
+eviction under a byte budget, warm ``plan()`` skipping host prep, donation
+safety of cached leaves, shape-bucketed jit-key reuse across matrices, the
+stacked spgemm/spadd bucket launches, early bucket layout validation, the
+auto ``prune_top_k`` default, and serving-loop refit scheduling."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CSR, TPU_V5E, ScheduleTuner, corpus
+from repro.core.autotune import (AUTO_PRUNE_TOP_K, PRUNE_GRID_THRESHOLD,
+                                 Schedule, candidate_schedules)
+from repro.core.synthetic import gen_zipf
+from repro.selector import ScheduleCache, SelectorService
+from repro.sparse import (PreparedStore, SparseTensor, bucket_edge,
+                          content_key, launch_count, plan, plan_bucket,
+                          reset_counters, trace_count)
+from repro.sparse import ops_builtin
+
+RNG = np.random.default_rng(3)
+
+
+def _sparse(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((n, m)) < density) * rng.standard_normal((n, m))
+    return CSR.from_dense(d.astype(np.float32))
+
+
+# ------------------------------------------------------------ PreparedStore
+
+def test_bucket_edge_power_of_two_ish():
+    assert [bucket_edge(v) for v in (1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 13, 17)] \
+        == [1, 2, 3, 4, 6, 6, 8, 8, 12, 12, 16, 24]
+    for n in range(1, 2000):
+        e = bucket_edge(n)
+        assert e >= n
+        assert e / n <= 2.0   # bounded padding waste
+
+
+def test_store_hit_miss_eviction_under_byte_budget():
+    entry = lambda: np.zeros(25, np.float32)          # 100 bytes each
+    store = PreparedStore(byte_budget=250)            # room for two entries
+    assert store.get(("a",)) is None                  # miss
+    store.put(("a",), entry())
+    store.put(("b",), entry())
+    assert store.bytes_in_use == 200 and len(store) == 2
+    assert store.get(("a",)) is not None              # refresh a's recency
+    store.put(("c",), entry())                        # evicts LRU = b
+    assert store.get(("b",)) is None
+    assert store.get(("a",)) is not None and store.get(("c",)) is not None
+    tel = store.telemetry()
+    assert tel["evictions"] == 1 and tel["entries"] == 2
+    assert tel["bytes_in_use"] == 200 and tel["hits"] == 3
+    assert tel["misses"] == 2
+
+
+def test_store_rejects_entry_larger_than_budget():
+    store = PreparedStore(byte_budget=100)
+    ok = store.put(("big",), np.zeros(100, np.float32))   # 400 bytes
+    assert not ok and len(store) == 0 and store.bytes_in_use == 0
+    assert store.telemetry()["rejected"] == 1
+
+
+def test_store_byte_accounting_counts_pytree_leaves():
+    store = PreparedStore()
+    st = SparseTensor.from_csr(gen_zipf(128, seed=2), block_size=16)
+    store.put(("st",), st)
+    expect = sum(int(a.nbytes) for a in st.arrays.values())
+    assert store.bytes_in_use == expect
+
+
+# ------------------------------------------------- warm plan() = zero rebuild
+
+def test_warm_plan_skips_host_prep(monkeypatch):
+    A = gen_zipf(256, seed=5)
+    x = RNG.standard_normal(256).astype(np.float32)
+    sched = Schedule("bsr", 32, 1.0)
+    store = PreparedStore()
+    p1 = plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    y1 = np.asarray(p1.execute(x))
+    # prove the warm path: host prep must not run again
+    def boom(*a, **k):
+        raise AssertionError("host prep ran on a warm plan")
+    monkeypatch.setattr(SparseTensor, "from_csr", boom)
+    p2 = plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    assert p2.operands[0] is p1.operands[0]     # the cached device tensor
+    assert store.hits == 1
+    np.testing.assert_allclose(np.asarray(p2.execute(x)), y1)
+    np.testing.assert_allclose(y1, A.to_dense() @ x, rtol=2e-4, atol=2e-4)
+
+
+def test_warm_spgemm_spadd_skip_symbolic_phase(monkeypatch):
+    a, b = _sparse(96, 96, 0.08, 1), _sparse(96, 96, 0.08, 2)
+    store = PreparedStore()
+    C1 = plan("spgemm", (a, b), block_size=16, backend="jnp",
+              store=store).execute()
+    D1 = plan("spadd", (a, b), block_size=16, backend="jnp",
+              store=store).execute()
+    def boom(*args, **kw):
+        raise AssertionError("symbolic phase ran on a warm plan")
+    monkeypatch.setattr(ops_builtin, "spgemm_symbolic", boom)
+    monkeypatch.setattr(ops_builtin, "spadd_symbolic", boom)
+    monkeypatch.setattr(ops_builtin.BSR, "from_csr", boom)
+    C2 = plan("spgemm", (a, b), block_size=16, backend="jnp",
+              store=store).execute()
+    D2 = plan("spadd", (a, b), block_size=16, backend="jnp",
+              store=store).execute()
+    np.testing.assert_allclose(C2.to_dense(), C1.to_dense())
+    np.testing.assert_allclose(D2.to_dense(), D1.to_dense())
+    assert store.hits == 2
+    np.testing.assert_allclose(C2.to_dense(), a.to_dense() @ b.to_dense(),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(D2.to_dense(), a.to_dense() + b.to_dense(),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cached_leaves_are_donation_safe():
+    """A jit consumer that donates the cached tensor's buffers must not
+    corrupt later warm plans: the store detects the deleted leaves, serves
+    a miss, and the plan rebuilds — never dead device arrays."""
+    A = gen_zipf(192, seed=6)
+    x = RNG.standard_normal(192).astype(np.float32)
+    sched = Schedule("bsr", 32, 1.0)
+    store = PreparedStore()
+    p1 = plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    expect = np.asarray(p1.execute(x))
+    # normal (non-donating) reuse hits
+    plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    assert store.hits == 1
+    st = p1.operands[0]
+    f = jax.jit(lambda t: jax.tree.map(lambda a: a + 1.0, t),
+                donate_argnums=0)
+    f(st)   # donates (deletes) the cached float buffers on CPU
+    p2 = plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    assert store.telemetry()["invalidated"] == 1   # dead entry dropped
+    np.testing.assert_allclose(np.asarray(p2.execute(x)), expect)
+    # the rebuilt entry serves warm hits again
+    plan("spmv", (A,), schedule=sched, backend="jnp", store=store)
+    assert store.hits == 2
+
+
+# ----------------------------------------------- shape-bucketed jit keys
+
+def test_shape_bucket_reuses_compiled_executor():
+    """Two different matrices sharing a shape bucket + schedule reuse ONE
+    compiled executor: trace_count does not increase on the second plan."""
+    # dense-enough that both matrices populate every block -> identical
+    # bucketed container dims by construction
+    A1, A2 = _sparse(320, 320, 0.2, 11), _sparse(320, 320, 0.2, 12)
+    x = RNG.standard_normal(320).astype(np.float32)
+    sched = Schedule("bsr", 32, 1.0)
+    reset_counters()
+    y1 = np.asarray(plan("spmv", (A1,), schedule=sched,
+                         backend="jnp").execute(x))
+    traces = trace_count("matvec")
+    assert traces >= 1
+    y2 = np.asarray(plan("spmv", (A2,), schedule=sched,
+                         backend="jnp").execute(x))
+    assert trace_count("matvec") == traces   # no retrace for the 2nd matrix
+    np.testing.assert_allclose(y1, A1.to_dense() @ x, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(y2, A2.to_dense() @ x, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_shape_bucket_preserves_numerics(layout):
+    """Bucket-edge padding is numerically invisible for ell/sell/multi-RHS."""
+    A = gen_zipf(300, seed=21)   # 300 rows: forces real padding at bs=32
+    x = RNG.standard_normal(300).astype(np.float32)
+    X = RNG.standard_normal((300, 5)).astype(np.float32)
+    sched = (Schedule("bsr", 32, 1.0) if layout == "ell"
+             else Schedule("bsr", 32, 1.0, layout="sell", slice_height=4))
+    p = plan("spmv", (A,), schedule=sched, backend="jnp")
+    y = np.asarray(p.execute(x))
+    assert y.shape == (300,)
+    np.testing.assert_allclose(y, A.to_dense() @ x, rtol=2e-4, atol=2e-4)
+    Y = np.asarray(plan("spmm", (A,), schedule=sched,
+                        backend="jnp").execute(X))
+    assert Y.shape == (300, 5)
+    np.testing.assert_allclose(Y, A.to_dense() @ X, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------ stacked spgemm / spadd buckets
+
+def _pairs3(kind="gemm"):
+    if kind == "gemm":
+        return [( _sparse(96 + 16 * i, 80, 0.08, 30 + i),
+                  _sparse(80, 64 + 16 * i, 0.08, 40 + i)) for i in range(3)]
+    return [(_sparse(96 + 16 * i, 96 + 16 * i, 0.06, 50 + i),
+             _sparse(96 + 16 * i, 96 + 16 * i, 0.06, 60 + i))
+            for i in range(3)]
+
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_spgemm_bucket_of_3_single_stacked_launch(layout):
+    """A bucket of 3 spgemm members executes through ONE stacked launch
+    (launch_count ticks once, one compiled program) and matches the
+    per-pair plans exactly."""
+    pairs = _pairs3("gemm")
+    sched = (Schedule("bsr", 16, 1.0) if layout == "ell"
+             else Schedule("bsr", 16, 1.0, layout="sell"))
+    singles = [plan("spgemm", (a, b), schedule=sched,
+                    backend="jnp").execute() for a, b in pairs]
+    reset_counters()
+    bucket = plan_bucket("spgemm", pairs, sched, backend="jnp")
+    assert bucket.n_members == 3
+    Cs = bucket.execute()
+    assert launch_count("spgemm") == 1
+    assert trace_count("spgemm_stacked") == 1
+    for Ci, Si, (a, b) in zip(Cs, singles, pairs):
+        np.testing.assert_array_equal(Ci.block_cols, Si.block_cols)
+        np.testing.assert_allclose(Ci.to_dense(), Si.to_dense(),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(Ci.to_dense(),
+                                   a.to_dense() @ b.to_dense(),
+                                   rtol=2e-4, atol=2e-4)
+    # second tick: same program, one more launch, no retrace
+    bucket.execute()
+    assert launch_count("spgemm") == 2
+    assert trace_count("spgemm_stacked") == 1
+
+
+def test_spadd_bucket_of_3_single_stacked_launch():
+    pairs = _pairs3("add")
+    sched = Schedule("bsr", 16, 1.0)
+    singles = [plan("spadd", (a, b), schedule=sched,
+                    backend="jnp").execute() for a, b in pairs]
+    reset_counters()
+    bucket = plan_bucket("spadd", pairs, sched, backend="jnp")
+    assert bucket.n_members == 3
+    Ds = bucket.execute()
+    assert launch_count("spadd") == 1
+    assert trace_count("spadd_stacked") == 1
+    for Di, Si, (a, b) in zip(Ds, singles, pairs):
+        np.testing.assert_array_equal(Di.to_dense(), Si.to_dense())
+        np.testing.assert_allclose(Di.to_dense(),
+                                   a.to_dense() + b.to_dense(),
+                                   rtol=1e-5, atol=1e-5)
+    bucket.execute()
+    assert launch_count("spadd") == 2
+    assert trace_count("spadd_stacked") == 1
+
+
+@pytest.mark.parametrize("op", ["spgemm", "spadd"])
+def test_pairop_bucket_interpret_backend(op):
+    """The stacked launch runs the actual Pallas kernel schedule (unrolled
+    inside one program) on the interpret backend."""
+    pairs = _pairs3("gemm" if op == "spgemm" else "add")
+    bucket = plan_bucket(op, pairs, Schedule("bsr", 16, 1.0),
+                         backend="interpret")
+    for Ci, (a, b) in zip(bucket.execute(), pairs):
+        oracle = (a.to_dense() @ b.to_dense() if op == "spgemm"
+                  else a.to_dense() + b.to_dense())
+        np.testing.assert_allclose(Ci.to_dense(), oracle,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bucket_store_caches_stacked_arrays():
+    pairs = _pairs3("gemm")
+    sched = Schedule("bsr", 16, 1.0)
+    store = PreparedStore()
+    C1 = plan_bucket("spgemm", pairs, sched, backend="jnp",
+                     store=store).execute()
+    assert store.hits == 0 and len(store) == 1
+    C2 = plan_bucket("spgemm", pairs, sched, backend="jnp",
+                     store=store).execute()
+    assert store.hits == 1          # stacked build skipped on repeat tick
+    for c1, c2 in zip(C1, C2):
+        np.testing.assert_array_equal(c1.to_dense(), c2.to_dense())
+    # matvec buckets cache the same way
+    mats = [gen_zipf(192 + 32 * i, seed=70 + i) for i in range(3)]
+    xs = [RNG.standard_normal(m.shape[1]).astype(np.float32) for m in mats]
+    b1 = plan_bucket("spmv", mats, sched, backend="jnp", store=store)
+    ys1 = [np.asarray(y) for y in b1.execute(xs)]
+    h = store.hits
+    b2 = plan_bucket("spmv", mats, sched, backend="jnp", store=store)
+    assert store.hits == h + 1
+    for y1, y2 in zip(ys1, b2.execute(xs)):
+        np.testing.assert_allclose(y1, np.asarray(y2))
+
+
+def test_pairop_bucket_accepts_prepared_bsr_members():
+    """The advertised bucket-member contract: spgemm/spadd members may be
+    raw CSR, prepared BSR containers, or bsr-layout SparseTensors."""
+    from repro.core.csr import BSR
+    pairs = _pairs3("add")
+    sched = Schedule("bsr", 16, 1.0)
+    prepped = [(SparseTensor.from_csr(a, layout="bsr", block_size=16),
+                BSR.from_csr(b, 16)) for a, b in pairs]
+    for Di, (a, b) in zip(plan_bucket("spadd", prepped, sched,
+                                      backend="jnp").execute(), pairs):
+        np.testing.assert_allclose(Di.to_dense(),
+                                   a.to_dense() + b.to_dense(),
+                                   rtol=1e-5, atol=1e-5)
+    # block-size mismatch against the schedule fails loudly, not silently
+    with pytest.raises(ValueError, match="block_size"):
+        plan_bucket("spadd", prepped, Schedule("bsr", 32, 1.0),
+                    backend="jnp").execute()
+
+
+def test_bucket_list_members_cache_and_validate_like_tuples():
+    pairs = [list(p) for p in _pairs3("gemm")]
+    sched = Schedule("bsr", 16, 1.0)
+    store = PreparedStore()
+    plan_bucket("spgemm", pairs, sched, backend="jnp", store=store).execute()
+    plan_bucket("spgemm", pairs, sched, backend="jnp", store=store).execute()
+    assert store.hits == 1          # list pairs key + cache like tuples
+    A = gen_zipf(128, seed=81)
+    sell_st = SparseTensor.from_csr(A, layout="sell", block_size=16,
+                                    slice_height=4)
+    with pytest.raises(ValueError, match="incompatible"):
+        plan_bucket("spgemm", [[sell_st, A]], sched)
+
+
+# --------------------------------------------- early bucket validation
+
+def test_plan_bucket_validates_member_layouts_early():
+    A = gen_zipf(128, seed=80)
+    sell_st = SparseTensor.from_csr(A, layout="sell", block_size=32,
+                                    slice_height=4)
+    # matvec bucket: a sell-prepared member under an ell-layout schedule
+    with pytest.raises(ValueError, match="member 1 .*incompatible"):
+        plan_bucket("spmv", [A, sell_st], Schedule("bsr", 32, 1.0))
+    # spgemm/spadd members must be raw blocked (bsr) or CSR, never ell/sell
+    ell_st = SparseTensor.from_csr(A, block_size=32)
+    with pytest.raises(ValueError, match="member 0 .*incompatible"):
+        plan_bucket("spgemm", [(ell_st, A), (A, A)],
+                    Schedule("bsr", 32, 1.0))
+    # schedule-level layout check still fires first
+    with pytest.raises(ValueError, match="supports layouts"):
+        plan_bucket("spadd", [(A, A)],
+                    Schedule("bsr", 32, 1.0, layout="nope"))
+
+
+def test_custom_planner_without_store_kwarg_still_works():
+    """register_op's documented planner contract is (operands, schedule,
+    backend, **kw); a planner that declares no store kwarg must keep
+    working even when a store (or a selector that owns one) is in play —
+    the serving-path extras are only offered to planners that accept them."""
+    from repro.sparse import Plan, register_op
+
+    def planner(operands, schedule, backend):
+        return Plan(op="custom_echo", schedule=schedule, backend=backend,
+                    _run=lambda v: v)
+
+    register_op("custom_echo", planner, overwrite=True)
+    try:
+        assert plan("custom_echo", ()).execute(7) == 7
+        store = PreparedStore()
+        assert plan("custom_echo", (), store=store).execute(8) == 8
+        assert len(store) == 0          # store silently unused, not a crash
+    finally:
+        import repro.sparse.registry as reg
+        reg._REGISTRY.pop("custom_echo", None)
+
+
+# --------------------------------------------------- autotune auto-pruning
+
+def test_prune_top_k_auto_flips_on_past_grid_threshold():
+    mats = corpus(n_matrices=6, n_min=128, n_max=192, seed=9)
+    big_grid = (candidate_schedules(1) + candidate_schedules(2)
+                + candidate_schedules(4))
+    assert len(big_grid) > PRUNE_GRID_THRESHOLD
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(
+        mats, max_mats=6, bootstrap_mats=2, candidates=big_grid)
+    full_sweep = 6 * len(big_grid)
+    expected = 2 * len(big_grid) + 4 * AUTO_PRUNE_TOP_K
+    assert tuner.fit_simulations_ == expected       # pinned reduction
+    assert tuner.fit_simulations_ < full_sweep / 2
+    # below the threshold the default remains the full sweep
+    small = ScheduleTuner("spmv", TPU_V5E).fit(mats, max_mats=4)
+    assert small.fit_simulations_ == 4 * len(candidate_schedules(1))
+
+
+# ------------------------------------------------ serving-loop refit ticks
+
+def test_refit_every_scheduled_from_serving_loop():
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache(),
+                          confidence_threshold=2.0,   # force verify feedback
+                          batch_max=16, refit_every=1, refit_min_examples=2)
+    held = corpus(n_matrices=4, n_min=256, n_max=384, seed=77,
+                  include_synthetic=False)
+    old_tree = tuner.tree
+    for name, _, A in held:
+        svc.submit(name, A)
+    assert len(held) <= 16          # one serving tick drains everything
+    svc.run()
+    tel = svc.telemetry()
+    assert tel["ticks"] >= 1
+    assert tel["refits"] >= 1                       # scheduled by the loop
+    assert not svc.retraining_examples              # buffer consumed
+    assert tuner.tree is not old_tree
+
+
+def test_service_prepared_store_hits_on_repeat_traffic():
+    train = corpus(n_matrices=9, n_min=256, n_max=384, seed=3)
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(train, max_mats=9)
+    svc = SelectorService(tuner, cache=ScheduleCache(), batch_max=8)
+    A = gen_zipf(300, seed=8)
+    x = RNG.standard_normal(300).astype(np.float32)
+    for tick in range(2):
+        svc.submit(f"a{tick}", A, x)
+        svc.submit(f"b{tick}", A, x)
+        decisions = svc.process_pending()
+        for d in decisions:
+            np.testing.assert_allclose(d.y, A.to_dense() @ x,
+                                       rtol=2e-4, atol=2e-4)
+    tel = svc.telemetry()
+    assert tel["prep_hits"] >= 1        # tick 2 reused tick 1's stacked prep
+    assert tel["fp_memo_hits"] >= 1     # characterize() ran once per matrix
+    # plan() through the service reuses the service's own store
+    p = plan("spmv", (A,), selector=svc)
+    assert p.source == "selector-cache"
+    np.testing.assert_allclose(np.asarray(p.execute(x)), A.to_dense() @ x,
+                               rtol=2e-4, atol=2e-4)
