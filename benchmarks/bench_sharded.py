@@ -1,0 +1,67 @@
+"""Sharded execution: nnz-balanced vs equal-row partitioning (DESIGN.md §10).
+
+Rows sweep 1/2/4/8 shards on a skewed (zipf a=1.6) matrix — the category
+where row skew concentrates work and equal-row splits starve most shards.
+Each row reports wall-clock through ``plan_sharded`` plus the Eq. 5
+imbalance of the split (mean and max relative deviation, and the per-shard
+deviations), so the bench JSON carries the acceptance-level fact: the
+nnz-balanced split's max-shard imbalance is strictly below the equal-row
+split's on skewed inputs. Device counts are simulated on CPU via
+``--xla_force_host_platform_device_count``: benchmarks/run.py sets it (the
+launch/dryrun.py pattern) only when this module runs ALONE — e.g.
+``python -m benchmarks.run sharded``, the smoke.sh/CI invocation — so the
+other modules' timing rows keep their single-device environment; in a
+mixed run the imbalance columns (device-count-independent) remain the
+signal and the launch falls back to however many devices exist.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.autotune import Schedule
+from repro.core.counters import shard_counters
+from repro.core.synthetic import gen_zipf
+from repro.sparse import (PreparedStore, bounds_imbalance, partition_rows,
+                          plan_sharded)
+from .common import FULL, Row, time_call
+
+SHARD_SWEEP = (1, 2, 4, 8)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    n = 4096 if FULL else 1024
+    A = gen_zipf(n, seed=5, a=1.6)
+    x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    sched = Schedule("bsr", 32, 1.0, layout="sell", slice_height=8)
+    lengths = A.row_lengths()
+    for n_shards in SHARD_SWEEP:
+        for strategy in ("rows", "nnz"):
+            part = partition_rows(A, n_shards, strategy)
+            imb = bounds_imbalance(lengths, part.bounds)
+            devs = "|".join(f"{c['nnz_share_dev']:.3f}"
+                            for c in shard_counters(A, part.bounds))
+            store = PreparedStore()
+            p = plan_sharded("spmv", (A,), n_shards=n_shards, schedule=sched,
+                             strategy=strategy, backend="jnp", store=store)
+            us = time_call(lambda: np.asarray(p.execute(x)), repeats=3)
+            rows.append((f"sharded/{strategy}_d{n_shards}", us,
+                         f"n={n};shards={n_shards};"
+                         f"imb_mean={imb['mean']:.4f};"
+                         f"imb_max={imb['max']:.4f};shard_dev={devs}"))
+    # warm-plan row: repeat plan_sharded through one store skips both the
+    # partition and the per-shard prep (the zero-rebuild property of §9
+    # extended to the distributed path)
+    store = PreparedStore()
+    build = lambda: plan_sharded("spmv", (A,), n_shards=4, schedule=sched,
+                                 backend="jnp", store=store)
+    us_cold = time_call(build, repeats=1, warmup=0)
+    us_warm = time_call(build, repeats=3)
+    tel = store.telemetry()
+    rows.append(("sharded/plan_build_warm", us_warm,
+                 f"cold_us={us_cold:.0f};"
+                 f"speedup={us_cold / max(us_warm, 1e-9):.1f}x;"
+                 f"hits={tel['hits']:.0f}"))
+    return rows

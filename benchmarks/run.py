@@ -13,7 +13,8 @@ import traceback
 from . import (bench_synthetic_categories, bench_thread_imbalance,
                bench_tree_mape, bench_stall_proxies, bench_importances,
                bench_perf_by_category, bench_kernel_hillclimb,
-               bench_kernels_micro, bench_roofline, bench_selector)
+               bench_kernels_micro, bench_roofline, bench_selector,
+               bench_sharded)
 
 MODULES = [
     ("table2_fig3", bench_synthetic_categories),
@@ -26,6 +27,7 @@ MODULES = [
     ("kernels_micro", bench_kernels_micro),
     ("roofline", bench_roofline),
     ("selector", bench_selector),
+    ("sharded", bench_sharded),
 ]
 
 
@@ -36,6 +38,24 @@ def main(argv=None) -> None:
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="also write results as JSON to this path")
     args = ap.parse_args(argv)
+    selected = [(name, mod) for name, mod in MODULES
+                if not args.only or args.only in name]
+    # Simulated device count for the sharded rows (the launch/dryrun.py
+    # pattern): only when the run is the sharded module ALONE, so the
+    # timing environment of every other module's rows — the cross-PR bench
+    # trajectory — is untouched by the CPU being split into virtual
+    # devices. Must be set before jax first initializes its backend (no
+    # module's run() has executed yet; imports alone don't init), and
+    # appended, not overwritten, so an operator's own XLA_FLAGS survive.
+    # In a mixed run the sharded rows simply use however many devices
+    # exist — the imbalance columns, the acceptance signal, are device-
+    # count-independent.
+    if [n for n, _ in selected] == ["sharded"] \
+            and "--xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=8"
+                                   ).strip()
     if args.json_out:
         # Fail fast on an unwritable path without truncating an existing
         # trajectory file (the real write is tmp+rename after the run).
@@ -46,9 +66,7 @@ def main(argv=None) -> None:
             ap.error(f"--json: {e}")
     results = {}
     print("name,us_per_call,derived")
-    for name, mod in MODULES:
-        if args.only and args.only not in name:
-            continue
+    for name, mod in selected:
         t0 = time.time()
         try:
             rows = mod.run()

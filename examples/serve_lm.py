@@ -12,14 +12,17 @@ cache discipline the SpMV selector applies to matrices.
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
 """
 import argparse
+import time
 
 import numpy as np
 
 from repro.core import TPU_V5E
+from repro.core.autotune import Schedule
+from repro.core.synthetic import gen_zipf
 from repro.launch.serve import main as serve_main
 from repro.selector import ScheduleCache
-from repro.sparse import (PreparedStore, moe_tile_schedule, plan,
-                          route_and_pad)
+from repro.sparse import (PreparedStore, launch_count, moe_tile_schedule,
+                          plan, route_and_pad)
 
 
 def decode_moe_ticks(n_ticks: int, d_model: int = 256, d_ff: int = 512,
@@ -63,6 +66,50 @@ def decode_moe_ticks(n_ticks: int, d_model: int = 256, d_ff: int = 512,
             "prep_entries": prep["entries"]}
 
 
+def decode_multirhs_ticks(n_ticks: int, n: int = 512, batch: int = 4,
+                          store: PreparedStore = None, seed: int = 0) -> dict:
+    """Batch each decode tick's vectors into ONE multi-RHS SpMM plan.
+
+    The serving loop used to run one ``spmv`` plan per request in the tick;
+    the SpMM ``n_rhs`` axis (modeled + benchmarked since PR 1, ROADMAP
+    open item) lets the tick stack its ``batch`` decode vectors into an
+    (n, batch) RHS and amortize every A-block DMA over the whole batch:
+    one launch per tick instead of ``batch``. Numerics are identical
+    column-for-column; the launch counters prove the dispatch collapse.
+    """
+    store = store if store is not None else PreparedStore()
+    A = gen_zipf(n, seed=seed, a=1.5)  # the tick's shared sparse operand
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((n_ticks, batch, n)).astype(np.float32)
+
+    sched_mv = Schedule("bsr", 64, 1.0, layout="sell", slice_height=8)
+    sched_mm = Schedule("bsr", 64, 1.0, layout="sell", slice_height=8,
+                        n_rhs=batch)
+    l0 = launch_count("spmv")
+    t0 = time.perf_counter()
+    per_req = [np.stack([np.asarray(
+        plan("spmv", (A,), schedule=sched_mv, backend="jnp",
+             store=store).execute(x)) for x in xs[t]], axis=1)
+        for t in range(n_ticks)]
+    t_spmv = time.perf_counter() - t0
+    spmv_launches = launch_count("spmv") - l0
+
+    l0 = launch_count("spmm")
+    t0 = time.perf_counter()
+    batched = [np.asarray(
+        plan("spmm", (A,), schedule=sched_mm, backend="jnp",
+             store=store).execute(xs[t].T)) for t in range(n_ticks)]
+    t_spmm = time.perf_counter() - t0
+    spmm_launches = launch_count("spmm") - l0
+
+    for a, b in zip(per_req, batched):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+    return {"ticks": n_ticks, "batch": batch,
+            "spmv_launches": spmv_launches, "spmm_launches": spmm_launches,
+            "spmv_s": t_spmv, "spmm_s": t_spmm,
+            "speedup": t_spmv / max(t_spmm, 1e-9)}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x22b")
@@ -84,6 +131,13 @@ def main() -> None:
           f"cache hit rate {moe['cache_hit_rate']:.2f} "
           f"({moe['cache_entries']:.0f} entries), prepared-operand hit rate "
           f"{moe['prep_hit_rate']:.2f}")
+
+    # Multi-RHS decode (ROADMAP item closed): the tick's decode vectors
+    # batch into one SpMM plan — one launch per tick instead of per request.
+    mr = decode_multirhs_ticks(min(args.gen_len, 8))
+    print(f"decode multi-RHS: {mr['ticks']} ticks x batch {mr['batch']}: "
+          f"{mr['spmv_launches']} spmv launches -> {mr['spmm_launches']} "
+          f"spmm launches, {mr['speedup']:.1f}x wall-clock")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,29 @@ np.testing.assert_allclose(y, A.to_dense() @ x, rtol=2e-4, atol=2e-4)
 print(f"plan smoke OK: {p.describe()} (source={p.source})")
 PY
 
+# sharded execution smoke (DESIGN.md §10): the equivalence + partitioner
+# suite re-runs under 4 simulated host devices (the dryrun.py pattern), so
+# the shard_map path — not just the 1-device fallback — is exercised; then
+# the bench family must prove nnz-balanced splits strictly beat equal-row
+# splits on the skewed matrix (the acceptance criterion, machine-checked)
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  python -m pytest -x -q tests/test_sharded.py
+sharded_json="${BENCH_SHARDED_JSON_OUT:-$tmpdir/bench_sharded.json}"
+python -m benchmarks.run sharded --json "$sharded_json"
+python - "$sharded_json" <<'PY'
+import json, sys
+data = json.load(open(sys.argv[1]))
+for d in (2, 4, 8):
+    stats = {}
+    for strat in ("nnz", "rows"):
+        rec = data[f"sharded/{strat}_d{d}"]
+        stats[strat] = dict(kv.split("=") for kv in rec["derived"].split(";"))
+    nnz_max, rows_max = (float(stats[s]["imb_max"]) for s in ("nnz", "rows"))
+    assert nnz_max < rows_max, (d, stats)   # strictly lower max-shard Eq.5
+    print(f"sharded d={d}: imb_max nnz={nnz_max:.4f} < rows={rows_max:.4f}")
+print("sharded smoke OK")
+PY
+
 # benchmark JSON trajectory emission stays machine-readable; BENCH_JSON_OUT
 # (set by CI) persists it so the workflow can upload it as an artifact
 bench_json="${BENCH_JSON_OUT:-$tmpdir/bench.json}"

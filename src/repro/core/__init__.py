@@ -23,7 +23,7 @@ from .dataset import corpus, DOMAINS
 from .decision_tree import DecisionTreeRegressor, kfold_cv, mape, r2_score
 from .platforms import Platform, PLATFORMS, TPU_V4, TPU_V5E, TPU_V5P, ROOFLINE_PLATFORM
 from .counters import (spmv_counters, sell_spmv_counters, spgemm_counters,
-                       spadd_counters)
+                       spadd_counters, shard_counters)
 from .perfmodel import (run_spmv_model, run_spmv_sell_model, run_spgemm_model,
                         run_spadd_model, execution_time, targets,
                         stall_breakdown)
@@ -39,6 +39,7 @@ __all__ = [
     "PLATFORMS", "TPU_V4", "TPU_V5E", "TPU_V5P", "ROOFLINE_PLATFORM",
     "sell_slice_widths", "sell_padding_fraction", "slice_imbalance",
     "spmv_counters", "sell_spmv_counters", "spgemm_counters", "spadd_counters",
+    "shard_counters",
     "run_spmv_model", "run_spmv_sell_model", "run_spgemm_model",
     "run_spadd_model", "execution_time", "targets",
     "stall_breakdown", "build_slice", "characterize_slice", "characterize_all",

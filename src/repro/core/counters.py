@@ -338,3 +338,43 @@ COUNTER_NAMES = (
     "padding_fraction", "vmem_miss_rate", "grid_imbalance", "hbm_bytes",
     "gather_bytes", "executed_flops",
 )
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: per-shard static features (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def shard_counters(csr: CSR, bounds) -> list:
+    """Per-shard static features for a contiguous row split.
+
+    ``bounds`` is the (n_shards + 1)-entry row boundary vector of a
+    ``repro.sparse.partition.RowPartition``. Each shard gets the Eq. 5
+    story at two scales: its own deviation from the ideal nnz share
+    (``nnz_share_dev`` — the cross-shard imbalance the partitioner
+    minimizes) and the within-shard ``grid_imbalance`` of its rows (the
+    per-shard schedule problem the selector solves shard by shard — skewed
+    matrices yield structurally different shards, hence different
+    fingerprints, hence different layouts/block sizes per shard).
+    """
+    bounds = np.asarray(bounds, np.int64)
+    lengths = csr.row_lengths()
+    csum = np.concatenate([[0], np.cumsum(lengths)])
+    n_parts = bounds.size - 1
+    total = float(csum[-1])
+    ideal = total / max(n_parts, 1)
+    out = []
+    for i in range(n_parts):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        seg = lengths[lo:hi]
+        nnz = float(csum[hi] - csum[lo])
+        mean = float(seg.mean()) if seg.size else 0.0
+        std = float(seg.std()) if seg.size else 0.0
+        out.append({
+            "rows": float(hi - lo),
+            "nnz": nnz,
+            "nnz_share_dev": abs(nnz - ideal) / ideal if ideal > 0 else 0.0,
+            "mean_row_length": mean,
+            "cv_row_length": std / mean if mean > 0 else 0.0,
+            "grid_imbalance": partition_imbalance(seg, 16),
+        })
+    return out

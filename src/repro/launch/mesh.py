@@ -31,6 +31,25 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"), devices=devices)
 
 
+SHARD_AXIS = "shards"
+
+
+def make_shard_mesh(n_shards: int, devices: Optional[Sequence] = None):
+    """1-D mesh for the sharded sparse path (DESIGN.md §10): one row shard
+    per slot on the ``shards`` axis. Returns None when fewer devices exist
+    than shards — plan_sharded then falls back to round-robin per-shard
+    launches instead of the single shard_map program. Simulate device
+    counts on CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (the ``launch/dryrun.py`` pattern)."""
+    if devices is None:
+        devices = jax.devices()
+    n_shards = int(n_shards)
+    if n_shards < 1 or len(devices) < n_shards:
+        return None
+    return jax.make_mesh((n_shards,), (SHARD_AXIS,),
+                         devices=devices[:n_shards])
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes of a mesh (pod included when present)."""
     names = mesh.axis_names

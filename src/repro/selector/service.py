@@ -105,7 +105,8 @@ class SelectorService:
         self._counts = {"requests": 0, "cache_hits": 0, "tree_served": 0,
                         "verify_fallbacks": 0, "batches": 0, "buckets": 0,
                         "executed": 0, "stacked_launches": 0, "refits": 0,
-                        "ticks": 0, "fp_memo_hits": 0}
+                        "ticks": 0, "fp_memo_hits": 0, "shard_requests": 0,
+                        "sharded_plans": 0}
         self._bucket_sizes: List[int] = []
 
     # ------------------------------------------------------------- ingress
@@ -119,6 +120,23 @@ class SelectorService:
         dec = self._decide(Request(name, csr), batch_id=-1)
         self._counts["requests"] += 1
         return dec
+
+    def select_shards(self, shards: List[CSR],
+                      name: str = "shard") -> List[Decision]:
+        """One decision PER ROW SHARD of a partitioned matrix — the
+        schedule source behind ``repro.sparse.plan_sharded`` (DESIGN.md
+        §10). Each shard is fingerprinted and decided independently
+        through the same cache -> tree -> verify path, because a skewed
+        matrix's shards differ structurally (a hub-core shard wants a
+        different layout/block size than a sparse-tail shard); recurring
+        shard traffic hits the fingerprint cache and the content-key memo
+        exactly like whole-matrix traffic."""
+        decs = [self._decide(Request(f"{name}{i}", csr), batch_id=-1)
+                for i, csr in enumerate(shards)]
+        self._counts["requests"] += len(shards)
+        self._counts["shard_requests"] += len(shards)
+        self._counts["sharded_plans"] += 1
+        return decs
 
     # ------------------------------------------------------------ decisions
     def _verify(self, fp: Fingerprint, A: CSR) -> Tuple[Schedule, float]:

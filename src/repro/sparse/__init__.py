@@ -24,15 +24,20 @@ differing matrices reuse one compiled executor instead of retracing.
 """
 from . import ops_builtin  # noqa: F401  (registers the built-in ops)
 from .ops_builtin import moe_tile_schedule, route_and_pad
-from .plan import (Plan, launch_count, plan, plan_bucket, reset_counters,
-                   trace_count)
+from .partition import (RowPartition, bounds_imbalance, partition_rows,
+                        slice_rows)
+from .plan import (Plan, launch_count, plan, plan_bucket, plan_sharded,
+                   reset_counters, trace_count)
 from .prepared import PreparedStore, bucket_edge, content_key
 from .registry import OpSpec, get_op, list_ops, register_op
-from .tensor import LAYOUT_FIELDS, SparseMeta, SparseTensor
+from .tensor import (LAYOUT_FIELDS, ShardedMeta, ShardedSparseTensor,
+                     SparseMeta, SparseTensor)
 
 __all__ = [
-    "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore", "SparseMeta",
-    "SparseTensor", "bucket_edge", "content_key", "get_op", "launch_count",
-    "list_ops", "moe_tile_schedule", "plan", "plan_bucket", "register_op",
-    "reset_counters", "route_and_pad", "trace_count",
+    "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore", "RowPartition",
+    "ShardedMeta", "ShardedSparseTensor", "SparseMeta", "SparseTensor",
+    "bounds_imbalance", "bucket_edge", "content_key", "get_op",
+    "launch_count", "list_ops", "moe_tile_schedule", "partition_rows",
+    "plan", "plan_bucket", "plan_sharded", "register_op", "reset_counters",
+    "route_and_pad", "slice_rows", "trace_count",
 ]

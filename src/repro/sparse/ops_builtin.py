@@ -56,7 +56,7 @@ from ..kernels.moe_gmm.ref import ref_gmm
 from .plan import Plan, _bump_trace
 from .prepared import PreparedStore, array_key, bucket_edge, content_key
 from .registry import register_op
-from .tensor import SparseTensor
+from .tensor import ShardedMeta, ShardedSparseTensor, SparseTensor
 
 MATVEC_LAYOUTS = ("ell", "sell", "dense")
 
@@ -428,6 +428,229 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
 
     return Plan(op=op, schedule=schedule, backend=backend, _run=run,
                 n_members=len(shapes))
+
+
+# ---------------------------------------------------------------------------
+# spmv / spmm — sharded distributed launch (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+_SHARDED_EXECS: dict = {}
+
+
+def _sharded_matvec_exec(mesh, layout: str, multi: bool):
+    """One jitted shard_map program per (mesh, layout, arity).
+
+    The stacked shard arrays are sharded along the leading member axis (one
+    shard per mesh slot) and the blocked RHS is replicated; each slot
+    computes its own output rows. A *row* decomposition needs only a concat
+    of per-shard results — no psum — so the program body has zero
+    cross-device collectives (the column-partitioned variant would psum
+    partial products instead; DESIGN.md §10 records the tradeoff).
+    """
+    key = (mesh, layout, multi)
+    fn = _SHARDED_EXECS.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from ..launch.mesh import SHARD_AXIS
+    P = jax.sharding.PartitionSpec
+
+    def local(arrays, xb):
+        # local leading dim is 1: this slot's single shard
+        if layout == "dense":
+            y = arrays["dense"][0] @ xb
+            return y[None]
+        bs = arrays["blocks"].shape[-1]
+        n_bc = xb.shape[0] // bs
+        xblk = xb.reshape((n_bc, bs) + xb.shape[1:])
+        if layout == "ell":
+            idx, cols = arrays["block_indices"][0], arrays["block_cols"][0]
+            eq = "rmab,rmbk->rak" if multi else "rmab,rmb->ra"
+            y = jnp.einsum(eq, arrays["blocks"][0][idx], xblk[cols])
+        else:  # sell
+            cb, cc, cr = (arrays["cell_block"][0], arrays["cell_col"][0],
+                          arrays["cell_row"][0])
+            perm = arrays["row_perm"][0]
+            eq = "tab,tbk->tak" if multi else "tab,tb->ta"
+            prods = jnp.einsum(eq, arrays["blocks"][0][cb], xblk[cc])
+            y = jax.ops.segment_sum(prods, cr, num_segments=perm.shape[0])
+            y = jnp.zeros_like(y).at[perm].set(y)
+        return y.reshape((1, y.shape[0] * y.shape[1]) + y.shape[2:])
+
+    mapped = shard_map(local, mesh=mesh, in_specs=(P(SHARD_AXIS), P()),
+                       out_specs=P(SHARD_AXIS))
+
+    def run(arrays, xb):
+        _bump_trace("matvec_sharded")
+        return mapped(arrays, xb)
+
+    fn = jax.jit(run)
+    _SHARDED_EXECS[key] = fn
+    return fn
+
+
+def _plan_matvec_sharded(operands, schedules, backend: str, *, op: str,
+                         part=None, shard_csrs: Optional[List] = None,
+                         mesh=None, rhs_tile: Optional[int] = None,
+                         sigma: int = SELL_SIGMA,
+                         store: Optional[PreparedStore] = None,
+                         shape_bucket: bool = True,
+                         operand_key: Optional[str] = None, **_) -> Plan:
+    """Distributed matvec plan: one prepared shard per mesh slot.
+
+    Homogeneous per-shard schedules on the jnp backend execute as ONE
+    shard_map program over the ``shards`` mesh axis (stacked arrays sharded
+    on the member axis, RHS replicated, outputs concatenated by row range).
+    Heterogeneous schedules — the per-shard selector picking different
+    layouts/block sizes for skewed shards — or too few devices fall back to
+    round-robin per-shard launches: each shard's operands are committed to
+    its own device and the per-shard jitted dispatches overlap
+    asynchronously. Both the partition and the prepared shard containers
+    ride the PreparedStore, so warm sharded plans skip partitioning AND
+    prep (the zero-rebuild property, extended to the distributed path).
+    """
+    (a,) = operands
+    sst: Optional[ShardedSparseTensor] = a if isinstance(
+        a, ShardedSparseTensor) else None
+    if sst is not None:
+        bounds = sst.meta.bounds
+        schedules = tuple(s if s is not None else st.meta.schedule
+                          for s, st in zip(schedules, sst.shards))
+        for st in sst.shards:
+            if st.layout not in MATVEC_LAYOUTS:
+                raise ValueError(f"{op} needs ell/sell/dense shards, got a "
+                                 f"{st.layout!r} SparseTensor")
+        shape = sst.meta.shape
+        strategy = sst.meta.strategy
+    else:
+        if part is None:
+            raise ValueError("sharded planning needs the RowPartition for a "
+                             "CSR operand")
+        bounds = part.bounds
+        if shard_csrs is None:
+            shard_csrs = part.slice(a)
+        shape = (int(a.shape[0]), int(a.shape[1]))
+        strategy = part.strategy
+    n_shards = len(bounds) - 1
+    true_rows = [bounds[i + 1] - bounds[i] for i in range(n_shards)]
+    n_cols = int(shape[1])
+    tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
+                                                  else 8)
+    uniform = len(set(schedules)) == 1 and schedules[0] is not None
+
+    if uniform and backend == "jnp":
+        from ..launch.mesh import make_shard_mesh
+        if mesh is None:
+            mesh = make_shard_mesh(n_shards)
+    else:
+        mesh = None
+
+    if mesh is not None:
+        # ---- single shard_map program over the mesh's shards axis. The
+        # stacked arrays are the ONLY device copy: CSR shards go through
+        # _bucket_hosts' host-container build, never per-shard staging, so
+        # the store pins one entry for the launch, not two.
+        from ..launch.mesh import SHARD_AXIS
+        stack_key = None if store is None or not isinstance(a, CSR) else (
+            "matvec_shards_stacked", operand_key or content_key(a),
+            strategy, bounds, tuple(schedules), sigma,
+            bool(shape_bucket), n_shards)
+        members = list(sst.shards) if sst is not None else shard_csrs
+
+        def build_stacked():
+            built = _build_matvec_bucket(members, schedules[0], sigma,
+                                         shape_bucket)
+            sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(SHARD_AXIS))
+            built["arrays"] = jax.device_put(built["arrays"], sharding)
+            return built
+
+        built = _cached(store, stack_key, build_stacked)
+        arrays, width, layout = built["arrays"], built["width"], built["layout"]
+        exec_fn = _sharded_matvec_exec(mesh, layout, False)
+        exec_fn_multi = _sharded_matvec_exec(mesh, layout, True)
+
+        def run(x):
+            # pad on device (eager .at[].set): a device-resident serving
+            # input never round-trips through the host
+            if getattr(x, "ndim", None) is None:
+                x = np.asarray(x, np.float32)
+            if x.shape[0] != n_cols:
+                raise ValueError(f"{op}: runtime input leading dim "
+                                 f"{x.shape[0]} != operand cols {n_cols}")
+            multi = x.ndim == 2
+            xj = jnp.asarray(x, jnp.float32)
+            if multi:
+                k = x.shape[1]
+                k_pad = -(-k // tile) * tile
+                xb = jnp.zeros((width, k_pad), jnp.float32) \
+                    .at[: x.shape[0], :k].set(xj)
+            else:
+                xb = jnp.zeros((width,), jnp.float32).at[: x.shape[0]].set(xj)
+            # replicate the padded RHS over the mesh (device-to-device
+            # broadcast): a dev-0-committed serving input would otherwise
+            # clash with the mesh-sharded operand arrays under jit
+            xb = jax.device_put(xb, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+            fn = exec_fn_multi if multi else exec_fn
+            ys = np.asarray(fn(arrays, xb))
+            if multi:
+                return np.concatenate(
+                    [ys[i, : true_rows[i], : x.shape[1]]
+                     for i in range(n_shards)], axis=0)
+            return np.concatenate(
+                [ys[i, : true_rows[i]] for i in range(n_shards)], axis=0)
+    else:
+        # ---- per-shard fallback: round-robin device placement, one jitted
+        # dispatch per shard (async overlap across devices); the path every
+        # heterogeneous-schedule plan takes, whatever the backend
+        if sst is None:
+            key = None if store is None else (
+                "matvec_shards", operand_key or content_key(a), strategy,
+                bounds, tuple(schedules), sigma, bool(shape_bucket))
+            sst = _cached(store, key, lambda: ShardedSparseTensor(
+                ShardedMeta(shape, bounds, strategy),
+                [SparseTensor.from_csr(c, schedule=s, sigma=sigma,
+                                       shape_bucket=shape_bucket)
+                 for c, s in zip(shard_csrs, schedules)]))
+            for st in sst.shards:
+                if st.layout not in MATVEC_LAYOUTS:
+                    raise ValueError(f"{op} needs ell/sell/dense shards, "
+                                     f"got a {st.layout!r} SparseTensor")
+        devices = jax.devices()
+        shard_devs = [devices[i % len(devices)]
+                      for i in range(len(sst.shards))]
+        placed = []
+        for st, dev in zip(sst.shards, shard_devs):
+            nst = SparseTensor(st.meta, {k: jax.device_put(v, dev)
+                                         for k, v in st.arrays.items()},
+                               host=st._host)
+            nst.true_shape = st.true_shape
+            placed.append(nst)
+        sub = [_plan_matvec((st,), s, backend, op=op, rhs_tile=rhs_tile)
+               for st, s in zip(placed, schedules)]
+
+        def run(x):
+            if getattr(x, "ndim", None) is None:
+                x = np.asarray(x, np.float32)
+            if x.shape[0] != n_cols:
+                raise ValueError(f"{op}: runtime input leading dim "
+                                 f"{x.shape[0]} != operand cols {n_cols}")
+            if isinstance(x, jax.Array):
+                # committed device input: device-to-device transfer per
+                # shard, never through the host
+                ys = [p._run(jax.device_put(x, d))
+                      for p, d in zip(sub, shard_devs)]
+            else:
+                # uncommitted host input: each shard's jit places it next
+                # to that shard's committed operands
+                ys = [p._run(x) for p in sub]
+            return np.concatenate([np.asarray(y) for y in ys], axis=0)
+
+    sched = schedules[0] if uniform else None
+    return Plan(op=op, schedule=sched, backend=backend, _run=run,
+                operands=(sst,) if sst is not None else (),
+                n_members=n_shards, n_shards=n_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -983,13 +1206,15 @@ register_op(
     operand_spec="(A: CSR | SparseTensor | ELLBSR/SELLBSR) -> execute(x: (n,))",
     layouts=MATVEC_LAYOUTS,
     bucket_planner=functools.partial(_plan_matvec_bucket, op="spmv"),
-    bucket_layouts=_matvec_bucket_layouts)
+    bucket_layouts=_matvec_bucket_layouts,
+    sharded_planner=functools.partial(_plan_matvec_sharded, op="spmv"))
 register_op(
     "spmm", functools.partial(_plan_matvec, op="spmm"),
     operand_spec="(A: CSR | SparseTensor) -> execute(X: (n, k))",
     layouts=MATVEC_LAYOUTS,
     bucket_planner=functools.partial(_plan_matvec_bucket, op="spmm"),
-    bucket_layouts=_matvec_bucket_layouts)
+    bucket_layouts=_matvec_bucket_layouts,
+    sharded_planner=functools.partial(_plan_matvec_sharded, op="spmm"))
 register_op(
     "spgemm", _plan_spgemm,
     operand_spec="(A: CSR, B: CSR) -> execute() -> BSR",

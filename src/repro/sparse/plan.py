@@ -71,6 +71,11 @@ class Plan:
     modeled_time_s: Optional[float] = None
     confidence: Optional[float] = None
     n_members: int = 1                  # >1 for stacked bucket plans
+    n_shards: int = 1                   # >1 for sharded (distributed) plans
+    # per-shard selection provenance (sharded plans): one dict per shard
+    # with source / fingerprint_key / schedule — the acceptance-level record
+    # that each shard's schedule went through the selector independently
+    shard_provenance: Optional[List[Dict]] = None
 
     def execute(self, *runtime):
         """Run the planned launch on the runtime inputs (one device program
@@ -83,7 +88,7 @@ class Plan:
     def describe(self) -> str:
         s = self.schedule
         if s is None:
-            sched = "none"
+            sched = ("per-shard" if self.n_shards > 1 else "none")
         elif s.backend == "dense":
             sched = "dense"
         else:
@@ -91,6 +96,8 @@ class Plan:
                    else f"ell q={s.ell_quantile}")
             sched = f"{s.backend} bs={s.block_size} {lay} rhs={s.n_rhs}"
         extra = f" members={self.n_members}" if self.n_members > 1 else ""
+        if self.n_shards > 1:
+            extra = f" shards={self.n_shards}"
         return f"plan[{self.op}] {sched} via {self.source}{extra}"
 
 
@@ -161,6 +168,148 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
     p = spec.planner(operands, schedule, backend, **op_kwargs)
     for k, v in provenance.items():
         setattr(p, k, v)
+    return p
+
+
+def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
+                 schedule: Optional[Schedule] = None,
+                 schedules: Optional[Sequence[Schedule]] = None,
+                 selector=None, strategy: str = "nnz", backend: str = "auto",
+                 mesh=None, store: Optional[PreparedStore] = None,
+                 **op_kwargs) -> Plan:
+    """Distributed plan: nnz-balanced row shards, one schedule per shard.
+
+    The first operand's rows are partitioned into ``n_shards`` contiguous
+    shards (``strategy="nnz"`` balances work via the Eq. 5 counters;
+    ``"rows"`` is the naive equal-row split), each shard's schedule is
+    resolved independently — explicitly (``schedule`` for all shards,
+    ``schedules`` per shard) or through the ``selector``, whose per-shard
+    fingerprints let skewed matrices get different layouts/block sizes per
+    shard — and the op's sharded planner builds the launch: one shard_map
+    program over the mesh's ``shards`` axis when the shard schedules agree,
+    round-robin per-shard dispatches otherwise. ``n_shards`` defaults to
+    the local device count (simulate more on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    Per-shard provenance lands on ``Plan.shard_provenance``; the
+    PreparedStore (``store=``, or the selector's own) caches the partition
+    and the prepared shard operands, so warm sharded plans skip both.
+    """
+    import jax
+    from .partition import STRATEGIES, partition_rows
+    from .tensor import ShardedSparseTensor, SparseTensor
+    spec = get_op(op)
+    if spec.sharded_planner is None:
+        raise ValueError(f"op {op!r} has no sharded execution path; "
+                         "ops with one register a sharded_planner")
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown partition strategy {strategy!r}; "
+                         f"one of {STRATEGIES}")
+    if not isinstance(operands, tuple):
+        operands = (operands,)
+    backend = resolve_backend(backend)
+    a = operands[0]
+    if selector is not None and store is None:
+        store = getattr(selector, "prepared_store", None)
+
+    part = None
+    shard_csrs: Optional[List[CSR]] = None
+    ck: Optional[str] = None
+    from_prepared = False
+    if isinstance(a, ShardedSparseTensor):
+        n_parts = a.n_shards
+        if n_shards is not None and int(n_shards) != n_parts:
+            raise ValueError(f"operand is already partitioned into "
+                             f"{n_parts} shards; n_shards={n_shards} "
+                             "cannot re-partition a ShardedSparseTensor")
+        if schedules is None and schedule is None:
+            if selector is not None:
+                raise TypeError(
+                    "selector-resolved sharded planning needs a CSR first "
+                    "operand (a prepared ShardedSparseTensor carries its "
+                    "shards' schedules; pass the CSR to re-select)")
+            schedules = a.schedules()
+            from_prepared = True
+    elif isinstance(a, CSR):
+        if n_shards is None:
+            n_shards = jax.local_device_count()
+        n_shards = max(int(n_shards), 1)
+        if store is not None:
+            from .prepared import content_key
+            ck = content_key(a)
+        part_key = None if ck is None else ("row_partition", ck,
+                                            n_shards, strategy)
+        built = store.get(part_key) if part_key is not None else None
+        if built is None:
+            part = partition_rows(a, n_shards, strategy)
+            built = {"part": part, "shards": part.slice(a)}
+            if part_key is not None:
+                # CSR shards are plain dataclasses, not pytrees, so the
+                # store's generic leaf-nbytes accounting would see 0 bytes
+                # and the LRU could never evict them — count them here
+                store.put(part_key, built, nbytes=sum(
+                    arr.nbytes for c in built["shards"]
+                    for arr in (c.row_ptrs, c.col_idxs, c.nnz_vals)))
+        part = built["part"]
+        shard_csrs = built["shards"]
+        n_parts = part.n_parts
+    else:
+        raise TypeError("plan_sharded needs a CSR or ShardedSparseTensor "
+                        f"first operand, got {type(a).__name__}")
+
+    provenance: Optional[List[Dict]] = None
+    if schedules is not None:
+        scheds = list(schedules)
+        if len(scheds) != n_parts:
+            raise ValueError(f"{len(scheds)} schedules for {n_parts} shards")
+        src = "prepared" if from_prepared else "explicit"
+        provenance = [{"source": src, "schedule": s} for s in scheds]
+    elif schedule is not None:
+        scheds = [schedule] * n_parts
+        provenance = [{"source": "explicit", "schedule": schedule}
+                      for _ in range(n_parts)]
+    elif selector is not None:
+        if shard_csrs is None:
+            raise TypeError("selector-resolved sharded planning needs a CSR "
+                            "first operand (shards must be characterized)")
+        if hasattr(selector, "select_shards"):       # SelectorService
+            decs = selector.select_shards(shard_csrs, name=f"{op}-shard")
+            scheds = [d.schedule for d in decs]
+            provenance = [{"source": f"selector-{d.source}",
+                           "fingerprint_key": d.fingerprint_key,
+                           "confidence": d.confidence,
+                           "modeled_time_s": d.modeled_time_s,
+                           "schedule": d.schedule} for d in decs]
+        elif hasattr(selector, "select"):            # ScheduleTuner
+            scheds, provenance = [], []
+            for c in shard_csrs:
+                s, info = selector.select(c)
+                scheds.append(s)
+                provenance.append({
+                    "source": "tuner", "schedule": s,
+                    "modeled_time_s": info.get("verified_time_s")})
+        else:
+            raise TypeError(f"unsupported selector "
+                            f"{type(selector).__name__}")
+    else:
+        default = SparseTensor.default_schedule()
+        scheds = [default] * n_parts
+        provenance = [{"source": "default", "schedule": default}
+                      for _ in range(n_parts)]
+    for s in scheds:
+        if s is not None and s.backend != "dense" and spec.layouts \
+                and s.layout not in spec.layouts:
+            raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
+                             f"a shard schedule asks for {s.layout!r}")
+
+    if store is not None and spec.sharded_store_ok:
+        op_kwargs = dict(op_kwargs, store=store)
+        if ck is not None:
+            op_kwargs.setdefault("operand_key", ck)
+    p = spec.sharded_planner(operands, tuple(scheds), backend, part=part,
+                             shard_csrs=shard_csrs, mesh=mesh, **op_kwargs)
+    p.source = f"sharded-{strategy}"
+    p.shard_provenance = provenance
     return p
 
 

@@ -28,6 +28,8 @@ what make it pay off:
 from __future__ import annotations
 
 import hashlib
+import json
+import os
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -35,6 +37,8 @@ import jax
 import numpy as np
 
 from ..core.csr import CSR
+
+STORE_INDEX_VERSION = 1
 
 # Default device-byte budget of a store: enough for serving working sets,
 # small enough that an unbounded stream of distinct matrices cannot pin
@@ -193,9 +197,54 @@ class PreparedStore:
         self._entries.clear()
         self.bytes_in_use = 0
 
+    # -------------------------------------------------- cross-run persistence
+    # Only the *index* (key reprs + byte sizes, LRU order) and the telemetry
+    # counters persist — never the device buffers. The cached values are
+    # live jax.Array handles whose backing memory is process- and
+    # device-local: serializing them would mean a full host round-trip of
+    # the working set, and a reloaded copy would still have to be
+    # re-uploaded and re-validated against a fresh jit cache — i.e. exactly
+    # the cold rebuild the store already performs on a miss. What a serving
+    # restart actually needs is context: what the prior process's hit rate
+    # was and how big its working set ran, which is what save()/load() carry
+    # (the ScheduleCache JSON pattern: atomic tmp+rename, versioned format).
+
+    def save(self, path: str) -> None:
+        """Persist the store's index + telemetry as JSON (atomic)."""
+        payload = {
+            "version": STORE_INDEX_VERSION,
+            "telemetry": self.telemetry(),
+            "entries": [{"key": repr(k), "nbytes": nb}
+                        for k, (_, nb) in self._entries.items()],
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> Dict:
+        """Load a prior run's index + telemetry for reporting context.
+
+        Device buffers are not (and cannot usefully be) restored — entries
+        rebuild lazily on first touch. The prior counters surface in
+        ``telemetry()`` under ``prior_*`` so a restarted server can report
+        its steady-state hit-rate expectation before the new process has
+        warmed up. A missing or stale-format file loads as empty context.
+        """
+        self.prior: Dict = {}
+        if not os.path.exists(path):
+            return self.prior
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != STORE_INDEX_VERSION:
+            return self.prior
+        self.prior = {"telemetry": payload.get("telemetry", {}),
+                      "entries": payload.get("entries", [])}
+        return self.prior
+
     def telemetry(self) -> Dict[str, float]:
         lookups = self.hits + self.misses
-        return {
+        out = {
             "entries": float(len(self._entries)),
             "bytes_in_use": float(self.bytes_in_use),
             "byte_budget": float(self.byte_budget),
@@ -207,3 +256,10 @@ class PreparedStore:
             "invalidated": float(self.invalidated),
             "hit_rate": self.hits / lookups if lookups else 0.0,
         }
+        prior = getattr(self, "prior", None)
+        if prior:
+            ptel = prior.get("telemetry", {})
+            out["prior_entries"] = float(len(prior.get("entries", [])))
+            out["prior_hit_rate"] = float(ptel.get("hit_rate", 0.0))
+            out["prior_bytes_in_use"] = float(ptel.get("bytes_in_use", 0.0))
+        return out

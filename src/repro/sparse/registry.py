@@ -49,12 +49,18 @@ class OpSpec:
     # member against this BEFORE the stacked build, so a mixed bucket fails
     # with a per-member error instead of deep inside the planner.
     bucket_layouts: Optional[Callable] = None
-    # Whether the (bucket) planner can receive the serving-path ``store=``
-    # / ``operand_key=`` kwargs; computed at registration so
-    # plan()/plan_bucket() never break a planner that does not declare them.
+    # Distributed plan path (DESIGN.md §10): turns (operands, per-shard
+    # schedules, backend) plus the row partition into a Plan that executes
+    # one shard per mesh slot. Ops without one reject plan_sharded().
+    sharded_planner: Optional[Callable] = None
+    # Whether the (bucket/sharded) planner can receive the serving-path
+    # ``store=`` / ``operand_key=`` kwargs; computed at registration so
+    # plan()/plan_bucket()/plan_sharded() never break a planner that does
+    # not declare them.
     planner_store_ok: bool = True
     planner_operand_key_ok: bool = True
     bucket_store_ok: bool = True
+    sharded_store_ok: bool = True
 
 
 _REGISTRY: Dict[str, OpSpec] = {}
@@ -65,17 +71,21 @@ def register_op(name: str, planner: Callable, *, operand_spec: str = "",
                 symbolic: Optional[Callable] = None,
                 bucket_planner: Optional[Callable] = None,
                 bucket_layouts: Optional[Callable] = None,
+                sharded_planner: Optional[Callable] = None,
                 overwrite: bool = False) -> OpSpec:
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"op {name!r} already registered "
                          "(pass overwrite=True to replace)")
     spec = OpSpec(name, planner, operand_spec, tuple(layouts), symbolic,
-                  bucket_planner, bucket_layouts,
+                  bucket_planner, bucket_layouts, sharded_planner,
                   planner_store_ok=_accepts_kwarg(planner, "store"),
                   planner_operand_key_ok=_accepts_kwarg(planner,
                                                         "operand_key"),
                   bucket_store_ok=(bucket_planner is not None
-                                   and _accepts_kwarg(bucket_planner, "store")))
+                                   and _accepts_kwarg(bucket_planner, "store")),
+                  sharded_store_ok=(sharded_planner is not None
+                                    and _accepts_kwarg(sharded_planner,
+                                                       "store")))
     _REGISTRY[name] = spec
     return spec
 

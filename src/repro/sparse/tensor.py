@@ -330,5 +330,102 @@ def pad_container_to_bucket(container: HostLayout) -> HostLayout:
     return out
 
 
+# ------------------------------------------------------- sharded container
+
+@dataclasses.dataclass(frozen=True)
+class ShardedMeta:
+    """Static aux data of a ``ShardedSparseTensor`` pytree node: the global
+    shape, the contiguous row bounds (shard ``i`` owns rows
+    ``[bounds[i], bounds[i+1])``), and the partition strategy."""
+
+    shape: Tuple[int, int]
+    bounds: Tuple[int, ...]
+    strategy: str = "nnz"
+
+
+class ShardedSparseTensor:
+    """Row-partitioned sparse operand: one prepared ``SparseTensor`` per
+    mesh slot, each with its own schedule (DESIGN.md §10).
+
+    The shards are the pytree *children* (each itself a SparseTensor
+    pytree), so the whole sharded operand passes through jit / device_put
+    like any nested pytree; the row bounds and global shape are static aux
+    data. Shards may carry different schedules — the per-shard selector
+    path resolves each shard's layout/block size from its own fingerprint,
+    which is the point of sharding a skewed matrix.
+    """
+
+    def __init__(self, meta: ShardedMeta, shards) -> None:
+        shards = tuple(shards)
+        if len(shards) != len(meta.bounds) - 1:
+            raise ValueError(f"{len(shards)} shards for "
+                             f"{len(meta.bounds) - 1} row ranges")
+        self.meta = meta
+        self.shards = shards
+
+    # -------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return self.shards, self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta: ShardedMeta, shards):
+        return cls(meta, shards)
+
+    # ------------------------------------------------------------- basics
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.meta.shape
+
+    @property
+    def bounds(self) -> Tuple[int, ...]:
+        return self.meta.bounds
+
+    def shard_rows(self) -> Tuple[int, ...]:
+        b = self.meta.bounds
+        return tuple(b[i + 1] - b[i] for i in range(self.n_shards))
+
+    def schedules(self) -> Tuple[Optional[Schedule], ...]:
+        return tuple(s.meta.schedule for s in self.shards)
+
+    def __repr__(self) -> str:
+        return (f"ShardedSparseTensor(shape={self.meta.shape}, "
+                f"n_shards={self.n_shards}, strategy={self.meta.strategy!r})")
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def from_csr(cls, csr: CSR, n_shards: int, schedules=None, *,
+                 strategy: str = "nnz", shape_bucket: bool = True,
+                 sigma: int = SELL_SIGMA) -> "ShardedSparseTensor":
+        """Partition ``csr``'s rows (nnz-balanced by default) and prepare
+        each shard under its own Schedule.
+
+        ``schedules`` is one Schedule for every shard, a per-shard
+        sequence, or None (the matvec default per shard). The heavy lifting
+        (partition caching, selector-resolved per-shard schedules, the
+        shard_map launch) lives in ``repro.sparse.plan_sharded``; this
+        constructor is the standalone container build.
+        """
+        from .partition import partition_rows
+        part = partition_rows(csr, n_shards, strategy)
+        if schedules is None or isinstance(schedules, Schedule):
+            schedules = [schedules] * part.n_parts
+        if len(schedules) != part.n_parts:
+            raise ValueError(f"{len(schedules)} schedules for "
+                             f"{part.n_parts} shards")
+        shards = [SparseTensor.from_csr(shard, schedule=s, sigma=sigma,
+                                        shape_bucket=shape_bucket)
+                  for shard, s in zip(part.slice(csr), schedules)]
+        meta = ShardedMeta((int(csr.shape[0]), int(csr.shape[1])),
+                           part.bounds, strategy)
+        return cls(meta, shards)
+
+
 jax.tree_util.register_pytree_node(
     SparseTensor, SparseTensor.tree_flatten, SparseTensor.tree_unflatten)
+jax.tree_util.register_pytree_node(
+    ShardedSparseTensor, ShardedSparseTensor.tree_flatten,
+    ShardedSparseTensor.tree_unflatten)
