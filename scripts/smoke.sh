@@ -8,7 +8,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--fast" ]]; then
   python -m pytest -x -q tests/test_selector.py tests/test_counters_lru.py \
-    tests/test_bench_schema.py tests/test_serving_path.py
+    tests/test_bench_schema.py tests/test_serving_path.py \
+    tests/test_resilience.py
 else
   python -m pytest -x -q
 fi
@@ -64,6 +65,29 @@ for d in (2, 4, 8):
     assert nnz_max < rows_max, (d, stats)   # strictly lower max-shard Eq.5
     print(f"sharded d={d}: imb_max nnz={nnz_max:.4f} < rows={rows_max:.4f}")
 print("sharded smoke OK")
+PY
+
+# chaos smoke (DESIGN.md §11): the recovery-path suite, then a 32-request
+# serve under a 20% deterministic fault rate across every injection site.
+# The machine-checked acceptance bar: every request completes, every served
+# output matches the reference, zero unhandled exceptions escape, the
+# telemetry accounts for every injected fault (fired == recovered), and the
+# fallback ladder actually engaged at least once (seed 7 guarantees it).
+python -m pytest -x -q -m chaos tests/test_resilience.py
+python - <<'PY'
+from repro.selector.serve import main
+tel = main(["--requests", "32", "--train-mats", "9", "--serve-mats", "5",
+            "--n-min", "256", "--n-max", "384", "--batch", "8", "--execute",
+            "--fault-rate", "0.2", "--fault-seed", "7"])
+assert tel["fault_fired"] > 0, tel
+assert tel["fault_fired"] == tel["fault_recovered"], tel
+assert tel["guard_fallbacks"] >= 1, tel
+assert tel["exec_checked"] > 0 and tel["exec_mismatches"] == 0, tel
+assert tel["requests"] == 32.0, tel
+print(f"chaos smoke OK: {tel['fault_fired']:.0f} faults fired, "
+      f"{tel['fault_recovered']:.0f} recovered, "
+      f"{tel['guard_fallbacks']:.0f} fallbacks, "
+      f"{tel['exec_checked']:.0f} outputs verified")
 PY
 
 # benchmark JSON trajectory emission stays machine-readable; BENCH_JSON_OUT

@@ -1,25 +1,32 @@
 """Persistent fingerprint -> Schedule cache with LRU eviction.
 
-One JSON file on disk, atomic tmp+rename writes, bounded entry count. Every
-entry stores the canonical (rounded) feature vector alongside the schedule:
-a lookup whose hash matches but whose canonical vector differs is a hash
-collision and is served as a miss (and counted), so aliasing can never hand
-a matrix another matrix's schedule. Telemetry counts hits / misses /
-collisions / evictions / fallback insertions for the serving loop's
-hit-rate reporting.
+One JSON file on disk, checksummed + atomically written (unique temp file,
+fsync, ``os.replace``), bounded entry count. Every entry stores the
+canonical (rounded) feature vector alongside the schedule: a lookup whose
+hash matches but whose canonical vector differs is a hash collision and is
+served as a miss (and counted), so aliasing can never hand a matrix another
+matrix's schedule. Corrupted persistence (truncated file, flipped bits) is
+recovered, never raised: a bad file loads as empty, a bad entry is skipped
+and counted — the cold-start-from-empty guarantee of DESIGN.md §11.
+Telemetry counts hits / misses / collisions / evictions / corruption /
+fault recoveries for the serving loop's hit-rate reporting.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 from collections import OrderedDict
 from typing import Dict, Optional
 
 from ..core.autotune import Schedule
+from ..sparse.resilience import (InjectedFault, atomic_write_json,
+                                 checksum_entries, fault_fired,
+                                 load_json_guarded, note_recovery,
+                                 verify_entries)
 from .fingerprint import Fingerprint
 
-CACHE_FORMAT_VERSION = 1
+# v2: per-entry crc32 checksums + guarded (skip-and-count) load
+CACHE_FORMAT_VERSION = 2
 
 
 def schedule_to_dict(sched: Schedule) -> Dict:
@@ -54,6 +61,10 @@ class ScheduleCache:
         self.collisions = 0
         self.context_misses = 0
         self.evictions = 0
+        self.corrupt_entries = 0
+        self.corrupt_files = 0
+        self.faulted_reads = 0
+        self.flush_failures = 0
         if path is not None and os.path.exists(path):
             self._load(path)
 
@@ -62,29 +73,55 @@ class ScheduleCache:
 
     # ----------------------------------------------------------------- I/O
     def _load(self, path: str) -> None:
-        with open(path) as f:
-            payload = json.load(f)
+        """Guarded load: a truncated/non-JSON file starts empty, an entry
+        with a missing or wrong checksum is skipped — both counted, never
+        raised (cold-start-from-empty guarantee)."""
+        payload = load_json_guarded(path)
+        if payload is None:
+            self.corrupt_files += 1
+            return
         if payload.get("version") != CACHE_FORMAT_VERSION:
             return  # stale format: start empty rather than misread entries
-        for entry in payload.get("entries", []):
-            self._entries[entry["key"]] = entry
+        raw = payload.get("entries", [])
+        entries, corrupt = verify_entries(raw if isinstance(raw, list) else [])
+        self.corrupt_entries += corrupt
+        for entry in entries:
+            if isinstance(entry.get("key"), str):
+                self._entries[entry["key"]] = entry
+            else:
+                self.corrupt_entries += 1
         while len(self._entries) > self.capacity:  # honor a smaller reopen
             self._entries.popitem(last=False)
             self.evictions += 1
 
-    def flush(self) -> None:
-        """Persist entries (LRU order preserved) atomically."""
+    def flush(self) -> bool:
+        """Persist entries (LRU order preserved): checksummed, unique temp
+        file + fsync + ``os.replace``. A failed flush (disk error, injected
+        cache-write fault) is counted and leaves both the in-memory state
+        and the previous on-disk file intact — returns False instead of
+        raising."""
         if self.path is None:
-            return
+            return True
         payload = {"version": CACHE_FORMAT_VERSION,
-                   "entries": list(self._entries.values())}
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+                   "entries": checksum_entries(list(self._entries.values()))}
+        try:
+            atomic_write_json(self.path, payload)
+        except (RuntimeError, OSError) as e:
+            self.flush_failures += 1
+            if isinstance(e, InjectedFault):
+                note_recovery(e.site)
+            return False
+        return True
 
     # -------------------------------------------------------------- lookup
     def get(self, fp: Fingerprint) -> Optional[Schedule]:
+        if fault_fired("cache-read", fp.key):
+            # injected fault: serve a miss — the selector re-decides, which
+            # is exactly the recovery a lost cache line needs
+            self.faulted_reads += 1
+            self.misses += 1
+            note_recovery("cache-read")
+            return None
         entry = self._entries.get(fp.key)
         if entry is None:
             self.misses += 1
@@ -128,5 +165,9 @@ class ScheduleCache:
             "collisions": float(self.collisions),
             "context_misses": float(self.context_misses),
             "evictions": float(self.evictions),
+            "corrupt_entries": float(self.corrupt_entries),
+            "corrupt_files": float(self.corrupt_files),
+            "faulted_reads": float(self.faulted_reads),
+            "flush_failures": float(self.flush_failures),
             "hit_rate": self.hits / lookups if lookups else 0.0,
         }

@@ -17,6 +17,7 @@ from typing import Optional
 import numpy as np
 
 from ..core import PLATFORMS, ScheduleTuner, corpus
+from ..sparse import resilience
 from .cache import ScheduleCache
 from .service import SelectorService
 
@@ -46,6 +47,14 @@ def main(argv: Optional[list] = None) -> dict:
                     help="persist the schedule cache to this JSON file")
     ap.add_argument("--execute", action="store_true",
                     help="run the SpMV kernel per request (jnp backend)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="install a deterministic FaultInjector firing at "
+                         "this rate across all sites (chaos mode)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault injector's deterministic draws")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request admission deadline; requests past it "
+                         "are shed, not served late")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -68,13 +77,28 @@ def main(argv: Optional[list] = None) -> dict:
     cache = ScheduleCache(path=args.cache_path)
     svc = SelectorService(tuner, cache=cache, batch_max=args.batch,
                           confidence_threshold=args.confidence_threshold,
-                          refit_every=args.refit_every)
+                          refit_every=args.refit_every,
+                          deadline_ms=args.deadline_ms)
     rng = np.random.default_rng(args.seed)
+    expected = {}
     for r in range(args.requests):
         name, _, A = held[r % len(held)]
         x = rng.standard_normal(A.shape[1]).astype(np.float32) \
             if args.execute else None
-        svc.submit(f"req{r}:{name}", A, x)
+        reqname = f"req{r}:{name}"
+        svc.submit(reqname, A, x)
+        if x is not None:
+            expected[reqname] = (A, x)
+
+    # chaos mode: the injector goes in AFTER fit (training has its own
+    # fault-tolerance story in train/fault_tolerance.py) and stays in
+    # through cache.flush() so the cache-write site is exercised too
+    inj = None
+    if args.fault_rate > 0:
+        inj = resilience.install_injector(
+            resilience.FaultInjector(args.fault_rate, seed=args.fault_seed))
+        print(f"fault injector: rate {args.fault_rate} "
+              f"seed {args.fault_seed} sites {', '.join(resilience.SITES)}")
 
     t0 = time.time()
     decisions = svc.run()
@@ -90,7 +114,33 @@ def main(argv: Optional[list] = None) -> dict:
               f"{d.batch_id:5d} {d.bucket:6d}  {s.backend} bs={s.block_size} "
               f"{layout} rhs={s.n_rhs}")
 
+    cache.flush()   # guarded: a failed flush is counted, never raised
     tel = svc.telemetry()
+    if inj is not None:
+        tel.update(inj.telemetry())
+        resilience.install_injector(None)
+
+    # Verify executed outputs — under fault injection this is the
+    # acceptance check that fallback-chain results match the reference, not
+    # merely that nothing crashed. A served y is correct if it matches the
+    # exact dense product (what the dense rung and exact schedules compute)
+    # OR the selected schedule's own unguarded reference run (lossy
+    # ell-quantile schedules legitimately truncate; the injector is already
+    # uninstalled so the reference build is clean).
+    from ..sparse.registry import get_op
+    checked = mismatches = 0
+    for d in decisions:
+        if d.y is None or d.name not in expected:
+            continue
+        A, x = expected[d.name]
+        checked += 1
+        if np.allclose(d.y, A.to_dense().astype(np.float32) @ x,
+                       rtol=2e-3, atol=2e-3):
+            continue
+        ref = np.asarray(get_op("spmv").planner((A,), d.schedule,
+                                                "jnp").execute(x))
+        if not np.allclose(d.y, ref, rtol=2e-3, atol=2e-3):
+            mismatches += 1
     print(f"\nserved {args.requests} requests in {t_serve*1e3:.0f}ms "
           f"({t_serve / max(args.requests, 1) * 1e6:.0f}us/req)")
     print(f"cache hit rate {tel['cache_hit_rate']:.2f}  "
@@ -104,11 +154,28 @@ def main(argv: Optional[list] = None) -> dict:
           f"hit rate {tel['prep_hit_rate']:.2f}, "
           f"{tel['prep_bytes_in_use'] / 1e6:.1f} MB resident  "
           f"refits {tel['refits']:.0f} (every {args.refit_every or '-'} ticks)")
-    cache.flush()
+    print(f"resilience: fallbacks {tel['guard_fallbacks']:.0f}  "
+          f"nan trips {tel['guard_nan_trips']:.0f}  "
+          f"dense served {tel['guard_dense_served']:.0f}  "
+          f"quarantine {tel['quarantine_entries']:.0f} entries "
+          f"(blocked {tel['quarantine_blocked']:.0f})  "
+          f"shed {tel['shed_requests']:.0f}  "
+          f"degraded ticks {tel['degraded_ticks']:.0f}")
+    if inj is not None:
+        by_site = "  ".join(f"{site}={n}" for site, n in
+                            sorted(inj.fired.items()) if n)
+        print(f"faults: fired {tel['fault_fired']:.0f} "
+              f"recovered {tel['fault_recovered']:.0f} "
+              f"(checks {tel['fault_checks']:.0f})  {by_site}")
+    if args.execute:
+        print(f"outputs verified vs dense reference: {checked} checked, "
+              f"{mismatches} mismatches")
     if args.cache_path:
         print(f"cache persisted to {args.cache_path} "
               f"({tel['cache_entries']:.0f} entries)")
     tel["serve_s"] = t_serve
+    tel["exec_checked"] = float(checked)
+    tel["exec_mismatches"] = float(mismatches)
     return tel
 
 

@@ -32,6 +32,8 @@ import numpy as np
 
 from ..core.autotune import Schedule, ScheduleTuner, _modeled_time
 from ..core.csr import CSR
+from ..sparse import resilience
+from ..sparse.resilience import Deadline
 from .cache import ScheduleCache
 from .fingerprint import Fingerprint, fingerprint
 from .predictor import Prediction, SchedulePredictor, retraining_row
@@ -43,6 +45,7 @@ class Request:
     csr: CSR
     x: Optional[np.ndarray] = None   # optional RHS: execute the kernel too
     ck: Optional[str] = None         # content_key memo (filled by _decide)
+    deadline: Optional[Deadline] = None   # admission deadline (shed if past)
 
 
 @dataclasses.dataclass
@@ -75,7 +78,13 @@ class SelectorService:
     def __init__(self, tuner: ScheduleTuner, cache: Optional[ScheduleCache] = None,
                  confidence_threshold: float = 0.02, verify_top_k: int = 0,
                  batch_max: int = 16, prepared_store=None,
-                 refit_every: int = 0, refit_min_examples: int = 8) -> None:
+                 refit_every: int = 0, refit_min_examples: int = 8,
+                 deadline_ms: Optional[float] = None, max_retries: int = 2,
+                 backoff_base_s: float = 0.005,
+                 quarantine: Optional[resilience.Quarantine] = None,
+                 executor: Optional[resilience.GuardedExecutor] = None,
+                 negative_penalty_s: float = 1.0,
+                 degraded_cooldown: int = 4) -> None:
         from ..sparse.prepared import PreparedStore
         self.tuner = tuner
         self.predictor = SchedulePredictor(tuner)
@@ -94,6 +103,21 @@ class SelectorService:
                                else PreparedStore())
         self.refit_every = max(int(refit_every), 0)
         self.refit_min_examples = int(refit_min_examples)
+        # resilience knobs (DESIGN.md §11): admission deadlines, bounded
+        # retry/backoff around bucket execution, quarantine-aware selection,
+        # and the degraded mode that sheds the verify sweep under pressure
+        self.deadline_ms = deadline_ms
+        self.max_retries = max(int(max_retries), 0)
+        self.backoff_base_s = float(backoff_base_s)
+        self.quarantine = (quarantine if quarantine is not None
+                           else resilience.default_quarantine())
+        self.executor = (executor if executor is not None
+                         else resilience.default_executor())
+        self.negative_penalty_s = float(negative_penalty_s)
+        self.degraded_cooldown = max(int(degraded_cooldown), 1)
+        self._degraded_until = 0
+        self._exec_pressure = False
+        self._last_fault_fired = 0
         self.pending: "deque[Request]" = deque()
         self.retraining_examples: List[Dict] = []
         # Fingerprint memo keyed by exact matrix bytes: characterize() is
@@ -106,12 +130,19 @@ class SelectorService:
                         "verify_fallbacks": 0, "batches": 0, "buckets": 0,
                         "executed": 0, "stacked_launches": 0, "refits": 0,
                         "ticks": 0, "fp_memo_hits": 0, "shard_requests": 0,
-                        "sharded_plans": 0}
+                        "sharded_plans": 0, "shed_requests": 0,
+                        "degraded_ticks": 0, "degraded_served": 0,
+                        "quarantine_blocked": 0, "quarantine_overridden": 0,
+                        "negative_examples": 0, "exec_retries": 0,
+                        "failed_executions": 0}
         self._bucket_sizes: List[int] = []
 
     # ------------------------------------------------------------- ingress
-    def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None) -> None:
-        self.pending.append(Request(name, csr, x))
+    def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None,
+               deadline_ms: Optional[float] = None) -> None:
+        ms = deadline_ms if deadline_ms is not None else self.deadline_ms
+        deadline = Deadline.after_ms(ms) if ms is not None else None
+        self.pending.append(Request(name, csr, x, deadline=deadline))
 
     def select(self, csr: CSR, name: str = "plan") -> Decision:
         """Single-request decision (fingerprint -> cache -> tree -> verify)
@@ -138,12 +169,39 @@ class SelectorService:
         self._counts["sharded_plans"] += 1
         return decs
 
+    # ----------------------------------------------------------- resilience
+    @property
+    def degraded(self) -> bool:
+        """True while the service is under pressure (recent sheds, execution
+        retries/failures, or injected faults): the autotune verify-sweep is
+        shed and low-confidence requests are served the tree schedule."""
+        return self._counts["ticks"] < self._degraded_until
+
+    def _quarantined(self, sched: Schedule) -> bool:
+        return sched.backend != "dense" and \
+            self.quarantine.blocked_any_backend(self.tuner.kernel, sched)
+
+    def _negative_example(self, fp: Fingerprint, sched: Schedule) -> None:
+        """Feed a quarantined pick into the retraining buffer with a
+        penalty time, so the next ``refit`` teaches the tree away from the
+        poisoned schedule instead of merely masking it."""
+        self.retraining_examples.append(
+            retraining_row(fp, sched, self.negative_penalty_s))
+        self._counts["negative_examples"] += 1
+
     # ------------------------------------------------------------ decisions
     def _verify(self, fp: Fingerprint, A: CSR) -> Tuple[Schedule, float]:
-        """The autotune simulation pass, optionally pruned by the tree."""
+        """The autotune simulation pass, optionally pruned by the tree —
+        and always excluding quarantined schedules (unless that empties the
+        sweep entirely, in which case the full list is kept and counted)."""
         candidates = [s for _, s in self.predictor.rank(fp.features)]
         if self.verify_top_k > 0:
             candidates = candidates[: self.verify_top_k]
+        avail = [s for s in candidates if not self._quarantined(s)]
+        if avail:
+            candidates = avail
+        else:
+            self._counts["quarantine_overridden"] += 1
         timed = [(_modeled_time(self.tuner.kernel, A, self.tuner.platform, s), s)
                  for s in candidates]
         timed.sort(key=lambda p: p[0])
@@ -166,13 +224,38 @@ class SelectorService:
     def _decide(self, req: Request, batch_id: int) -> Decision:
         fp = self._fingerprint(req)
         cached = self.cache.get(fp)
+        if cached is not None and self._quarantined(cached):
+            # a cached pick that has since been quarantined is never
+            # re-served: treat as a miss, log the negative example
+            self._counts["quarantine_blocked"] += 1
+            self._negative_example(fp, cached)
+            cached = None
         if cached is not None:
             self._counts["cache_hits"] += 1
             return Decision(req.name, cached, "cache", 1.0, fp.key, None,
                             batch_id, ck=req.ck)
         pred: Prediction = self.predictor.predict(fp)
         if pred.schedule.backend != "dense" and \
+                self._quarantined(pred.schedule):
+            # poisoned tree pick: re-decide through the (filtered) verify
+            # sweep, even in degraded mode — correctness over pressure
+            self._counts["quarantine_blocked"] += 1
+            self._negative_example(fp, pred.schedule)
+            sched, t = self._verify(fp, req.csr)
+            self._counts["verify_fallbacks"] += 1
+            self.cache.put(fp, sched, "verify", t)
+            return Decision(req.name, sched, "verify", pred.confidence,
+                            fp.key, t, batch_id, ck=req.ck)
+        if pred.schedule.backend != "dense" and \
                 pred.confidence < self.confidence_threshold:
+            if self.degraded:
+                # degraded mode: shed the verify sweep, serve the tree pick
+                self._counts["degraded_served"] += 1
+                self._counts["tree_served"] += 1
+                self.cache.put(fp, pred.schedule, "tree", pred.tree_time_s)
+                return Decision(req.name, pred.schedule, "tree",
+                                pred.confidence, fp.key, pred.tree_time_s,
+                                batch_id, ck=req.ck)
             sched, t = self._verify(fp, req.csr)
             self._counts["verify_fallbacks"] += 1
             self.cache.put(fp, sched, "verify", t)
@@ -184,6 +267,14 @@ class SelectorService:
         return Decision(req.name, pred.schedule, "tree", pred.confidence,
                         fp.key, pred.tree_time_s, batch_id, ck=req.ck)
 
+    def _shed(self, req: Request, batch_id: int) -> Decision:
+        """Deadline-exceeded admission: no fingerprint, no selection, no
+        execution — the request is answered with the default schedule and
+        counted, honoring the deadline instead of blowing through it."""
+        self._counts["shed_requests"] += 1
+        sched = Schedule("bsr", 128, 1.0, n_rhs=self.tuner.n_rhs)
+        return Decision(req.name, sched, "shed", 0.0, "", None, batch_id)
+
     # ------------------------------------------------------------- serving
     def process_pending(self, backend: str = "jnp") -> List[Decision]:
         """Drain up to ``batch_max`` requests as one serving tick: decide a
@@ -191,14 +282,21 @@ class SelectorService:
         the kernel for requests that carried an RHS (one bucket = one
         compiled kernel program)."""
         batch: List[Request] = []
-        while self.pending and len(batch) < self.batch_max:
-            batch.append(self.pending.popleft())
-        if not batch:
+        shed: List[Request] = []
+        while self.pending and len(batch) + len(shed) < self.batch_max:
+            req = self.pending.popleft()
+            if req.deadline is not None and req.deadline.exceeded():
+                shed.append(req)
+            else:
+                batch.append(req)
+        if not batch and not shed:
             return []
+        if self.degraded:
+            self._counts["degraded_ticks"] += 1
         batch_id = self._counts["batches"]
         self._counts["batches"] += 1
         decisions = [self._decide(req, batch_id) for req in batch]
-        self._counts["requests"] += len(batch)
+        self._counts["requests"] += len(batch) + len(shed)
 
         buckets: "Dict[Schedule, List[int]]" = {}
         for i, dec in enumerate(decisions):
@@ -211,9 +309,21 @@ class SelectorService:
             self._execute_bucket([(batch[i], decisions[i]) for i in members],
                                  backend)
         self._counts["buckets"] += len(buckets)
+        decisions.extend(self._shed(req, batch_id) for req in shed)
         # Serving-loop retraining tick (ROADMAP follow-up): fold the verify
         # feedback buffer into the tuner tree every ``refit_every`` ticks.
         self._counts["ticks"] += 1
+        self.quarantine.tick()
+        # pressure signal -> degraded window: any shed, execution
+        # retry/failure, or injected fault this tick sheds the verify sweep
+        # for the next ``degraded_cooldown`` ticks
+        inj = resilience.injector()
+        fired = sum(inj.fired.values()) if inj is not None else 0
+        if shed or self._exec_pressure or fired > self._last_fault_fired:
+            self._degraded_until = (self._counts["ticks"]
+                                    + self.degraded_cooldown)
+        self._exec_pressure = False
+        self._last_fault_fired = fired
         if self.refit_every and self._counts["ticks"] % self.refit_every == 0:
             self.refit(min_examples=self.refit_min_examples)
         return decisions
@@ -252,15 +362,37 @@ class SelectorService:
             # (content_key memo), so the bucket store key reuses those
             # instead of paying a second O(nnz) hashing pass per tick
             mks = [req.ck for req, _ in grp]
-            bucket_plan = plan_bucket("spmv", [req.csr for req, _ in grp],
-                                      grp[0][1].schedule, backend=backend,
-                                      store=self.prepared_store,
-                                      member_keys=(mks if all(mks) else None))
-            ys = bucket_plan.execute([req.x for req, _ in grp])
+
+            def attempt(grp=grp, mks=mks):
+                bucket_plan = plan_bucket(
+                    "spmv", [req.csr for req, _ in grp],
+                    grp[0][1].schedule, backend=backend,
+                    store=self.prepared_store,
+                    member_keys=(mks if all(mks) else None))
+                return bucket_plan.execute([req.x for req, _ in grp])
+
+            # bounded retry + exponential backoff (the run_with_restarts
+            # supervisor shape, sized for one serving call); the guard's
+            # fallback ladder inside the plan absorbs almost everything, so
+            # a retry here means the whole chain failed transiently
+            try:
+                ys = resilience.with_backoff(
+                    attempt, max_retries=self.max_retries,
+                    base_s=self.backoff_base_s, on_retry=self._on_exec_retry)
+            except resilience.GUARDED_EXCEPTIONS as e:
+                self._counts["failed_executions"] += 1
+                self._exec_pressure = True
+                if isinstance(e, resilience.InjectedFault):
+                    resilience.note_recovery(e.site)
+                continue
             self._counts["stacked_launches"] += 1
             for (req, dec), y in zip(grp, ys):
                 dec.y = np.asarray(y)
                 self._counts["executed"] += 1
+
+    def _on_exec_retry(self, attempt: int, exc: BaseException) -> None:
+        self._counts["exec_retries"] += 1
+        self._exec_pressure = True
 
     # ----------------------------------------------------------- retraining
     def refit(self, min_examples: int = 8) -> Dict[str, float]:
@@ -309,4 +441,20 @@ class SelectorService:
         for k in ("entries", "hits", "misses", "evictions", "bytes_in_use",
                   "hit_rate"):
             out[f"prep_{k}"] = prep[k]
+        # resilience ledger (DESIGN.md §11): guard fallbacks, quarantine
+        # state, degraded-mode activity, and — when a FaultInjector is
+        # installed — the fired/recovered accounting the chaos smoke checks
+        ex = self.executor.telemetry()
+        out["guard_fallbacks"] = ex["fallbacks"]
+        out["guard_nan_trips"] = ex["nan_trips"]
+        out["guard_dense_served"] = ex["dense_served"]
+        out["guard_quarantine_skips"] = ex["quarantine_skips"]
+        q = self.quarantine.telemetry()
+        out["quarantine_entries"] = q["entries"]
+        out["quarantine_entered"] = q["entered"]
+        out["quarantine_expired"] = q["expired"]
+        out["degraded"] = 1.0 if self.degraded else 0.0
+        inj = resilience.injector()
+        if inj is not None:
+            out.update(inj.telemetry())
         return out

@@ -30,14 +30,23 @@ from .plan import (Plan, launch_count, plan, plan_bucket, plan_sharded,
                    reset_counters, trace_count)
 from .prepared import PreparedStore, bucket_edge, content_key
 from .registry import OpSpec, get_op, list_ops, register_op
+from .resilience import (FALLBACK_CHAIN, Deadline, FaultInjector,
+                         GuardedExecutor, InjectedFault, Quarantine,
+                         default_executor, default_quarantine,
+                         install_injector, register_dense_ref,
+                         reset_resilience, with_backoff)
 from .tensor import (LAYOUT_FIELDS, ShardedMeta, ShardedSparseTensor,
                      SparseMeta, SparseTensor)
 
 __all__ = [
-    "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore", "RowPartition",
-    "ShardedMeta", "ShardedSparseTensor", "SparseMeta", "SparseTensor",
-    "bounds_imbalance", "bucket_edge", "content_key", "get_op",
-    "launch_count", "list_ops", "moe_tile_schedule", "partition_rows",
-    "plan", "plan_bucket", "plan_sharded", "register_op", "reset_counters",
-    "route_and_pad", "slice_rows", "trace_count",
+    "FALLBACK_CHAIN", "Deadline", "FaultInjector", "GuardedExecutor",
+    "InjectedFault", "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore",
+    "Quarantine", "RowPartition", "ShardedMeta", "ShardedSparseTensor",
+    "SparseMeta", "SparseTensor", "bounds_imbalance", "bucket_edge",
+    "content_key", "default_executor", "default_quarantine", "get_op",
+    "install_injector", "launch_count", "list_ops", "moe_tile_schedule",
+    "partition_rows", "plan", "plan_bucket", "plan_sharded",
+    "register_dense_ref", "register_op", "reset_counters",
+    "reset_resilience", "route_and_pad", "slice_rows", "trace_count",
+    "with_backoff",
 ]

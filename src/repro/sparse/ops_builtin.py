@@ -56,6 +56,7 @@ from ..kernels.moe_gmm.ref import ref_gmm
 from .plan import Plan, _bump_trace
 from .prepared import PreparedStore, array_key, bucket_edge, content_key
 from .registry import register_op
+from .resilience import check_fault, register_dense_ref
 from .tensor import ShardedMeta, ShardedSparseTensor, SparseTensor
 
 MATVEC_LAYOUTS = ("ell", "sell", "dense")
@@ -64,6 +65,7 @@ MATVEC_LAYOUTS = ("ell", "sell", "dense")
 def _cached(store: Optional[PreparedStore], key, builder):
     """Route a host-prep build through the PreparedStore when one is in
     play (``key=None`` marks an uncacheable operand)."""
+    check_fault("prep", str(key) if key is not None else "uncached")
     if store is None:
         return builder()
     return store.get_or_build(key, builder)
@@ -1239,3 +1241,116 @@ register_op(
     "flash_attention", _plan_flash,
     operand_spec="() -> execute(q, k, v: (BH, S, D))",
     layouts=("ell",))
+
+
+# ---------------------------------------------------------------------------
+# dense references — the guard's terminal fallback rung (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# Pure-numpy implementations matched to each op's execute() contract: same
+# runtime signature, same output container, no jax in the loop. A builder
+# raises TypeError for operand types it cannot reference; the guard then
+# simply has no dense rung and the chain ends at jnp.
+
+def _dense_of(a) -> np.ndarray:
+    if isinstance(a, CSR):
+        return a.to_dense().astype(np.float32)
+    if isinstance(a, BSR):
+        return np.asarray(a.to_dense(), np.float32)
+    if isinstance(a, SparseTensor):
+        if a.layout == "dense":
+            tr, tc = a.true_shape
+            return np.asarray(a.arrays["dense"], np.float32)[:tr, :tc]
+        raise TypeError(f"no dense reference for a prepared {a.layout!r} "
+                        "SparseTensor (plan from the CSR to enable the "
+                        "dense rung)")
+    if isinstance(a, np.ndarray):
+        return np.asarray(a, np.float32)
+    raise TypeError(f"no dense reference for operand {type(a).__name__}")
+
+
+def _dense_to_bsr(dense: np.ndarray, bs: int) -> BSR:
+    """Re-block a dense product into the BSR container spgemm/spadd
+    callers expect (block structure may differ from the symbolic union —
+    ``to_dense()`` equivalence is the contract)."""
+    return BSR.from_csr(CSR.from_dense(np.asarray(dense, np.float32)), bs)
+
+
+def _dense_ref_matvec(operands, schedule, **_):
+    (a,) = operands
+    ad = _dense_of(a)
+
+    def run(x):
+        x = np.asarray(x, np.float32)
+        if x.shape[0] > ad.shape[1]:    # bucket-padded RHS: pad is zeros
+            x = x[: ad.shape[1]]
+        return ad @ x
+
+    return run
+
+
+def _dense_ref_spgemm(operands, schedule, block_size: int = 128, **_):
+    a, b = operands
+    ad, bd = _dense_of(a), _dense_of(b)
+    bs = schedule.block_size if schedule is not None else block_size
+
+    def run():
+        return _dense_to_bsr(ad @ bd, bs)
+
+    return run
+
+
+def _dense_ref_spadd(operands, schedule, block_size: int = 128, **_):
+    a, b = operands
+    ad, bd = _dense_of(a), _dense_of(b)
+    bs = schedule.block_size if schedule is not None else block_size
+
+    def run():
+        return _dense_to_bsr(ad + bd, bs)
+
+    return run
+
+
+def _dense_ref_moe(operands, schedule, tile_m: Optional[int] = None, **_):
+    (tile_expert,) = operands
+    te = np.asarray(tile_expert, np.int64).ravel()
+    tm = tile_m if tile_m is not None else (
+        schedule.block_size if schedule is not None else 128)
+
+    def run(x, w):
+        x = np.asarray(x, np.float32)
+        w = np.asarray(w, np.float32)
+        out = np.zeros((x.shape[0], w.shape[2]), np.float32)
+        for i, e in enumerate(te):
+            lo = i * tm
+            hi = min(lo + tm, x.shape[0])
+            if lo >= hi:
+                break
+            out[lo:hi] = x[lo:hi] @ w[int(e)]
+        return out
+
+    return run
+
+
+def _dense_ref_flash(operands, schedule, causal: bool = True, **_):
+    def run(q, k, v):
+        q = np.asarray(q, np.float32)
+        k = np.asarray(k, np.float32)
+        v = np.asarray(v, np.float32)
+        s = np.einsum("bqd,bkd->bqk", q, k) / np.sqrt(q.shape[-1])
+        if causal:
+            mask = np.tril(np.ones(s.shape[-2:], bool))
+            s = np.where(mask, s, -np.inf)
+        s = s - s.max(axis=-1, keepdims=True)
+        p = np.exp(s)
+        p = p / p.sum(axis=-1, keepdims=True)
+        return np.einsum("bqk,bkd->bqd", p, v)
+
+    return run
+
+
+register_dense_ref("spmv", _dense_ref_matvec)
+register_dense_ref("spmm", _dense_ref_matvec)
+register_dense_ref("spgemm", _dense_ref_spgemm)
+register_dense_ref("spadd", _dense_ref_spadd)
+register_dense_ref("moe_gmm", _dense_ref_moe)
+register_dense_ref("flash_attention", _dense_ref_flash)

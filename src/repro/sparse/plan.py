@@ -26,6 +26,7 @@ import numpy as np
 from ..core.autotune import Schedule
 from ..core.csr import BSR, CSR, ELLBSR, SELLBSR
 from ..kernels.common import resolve_backend
+from . import resilience
 from .prepared import PreparedStore
 from .registry import get_op
 from .tensor import SparseTensor
@@ -101,7 +102,7 @@ class Plan:
         return f"plan[{self.op}] {sched} via {self.source}{extra}"
 
 
-def _resolve_with_selector(selector, A: CSR):
+def _resolve_with_selector(selector, A: CSR, op: str = ""):
     """(Schedule, provenance, operand content key) from a SelectorService
     or a ScheduleTuner. The service already hashed the matrix bytes for its
     fingerprint memo; the key is forwarded so the planner's PreparedStore
@@ -119,8 +120,18 @@ def _resolve_with_selector(selector, A: CSR):
         }, getattr(dec, "ck", None)
     if hasattr(selector, "select"):               # ScheduleTuner
         schedule, info = selector.select(A)
+        source = "tuner"
+        q = resilience.default_quarantine()
+        if op and schedule is not None \
+                and q.blocked_any_backend(op, schedule):
+            # never re-serve a poisoned schedule: re-argmin the candidate
+            # grid minus the quarantine (None = everything blocked; keep
+            # the pick — a degraded answer beats no answer)
+            resel = resilience.unquarantined_select(selector, A, op, q)
+            if resel is not None:
+                schedule, source = resel, "tuner-requarantined"
         return schedule, {
-            "source": "tuner",
+            "source": source,
             "modeled_time_s": info.get("verified_time_s"),
         }, None
     raise TypeError(f"unsupported selector {type(selector).__name__}; pass a "
@@ -153,7 +164,7 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
         store = getattr(selector, "prepared_store", None)
     if schedule is None and selector is not None:
         schedule, provenance, operand_key = _resolve_with_selector(
-            selector, operands[0])
+            selector, operands[0], op)
     if schedule is not None and schedule.backend != "dense" \
             and spec.layouts and schedule.layout not in spec.layouts:
         raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
@@ -165,7 +176,16 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
         op_kwargs = dict(op_kwargs, store=store)
         if operand_key is not None and spec.planner_operand_key_ok:
             op_kwargs.setdefault("operand_key", operand_key)
-    p = spec.planner(operands, schedule, backend, **op_kwargs)
+    # guarded build + guarded launch (DESIGN.md §11): transient prep faults
+    # retry, persistent ones degrade to the op's dense reference; every
+    # execute runs through the backend fallback ladder
+    dense_run = resilience.make_dense_run(op, operands, schedule, op_kwargs)
+    p = resilience.guarded_build(
+        lambda: spec.planner(operands, schedule, backend, **op_kwargs),
+        op=op, schedule=schedule, dense_run=dense_run)
+    resilience.guard_plan(
+        p, rebuild=lambda b: spec.planner(operands, schedule, b, **op_kwargs),
+        dense_run=dense_run)
     for k, v in provenance.items():
         setattr(p, k, v)
     return p
@@ -306,9 +326,19 @@ def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
         op_kwargs = dict(op_kwargs, store=store)
         if ck is not None:
             op_kwargs.setdefault("operand_key", ck)
-    p = spec.sharded_planner(operands, tuple(scheds), backend, part=part,
-                             shard_csrs=shard_csrs, mesh=mesh, **op_kwargs)
-    p.source = f"sharded-{strategy}"
+    dense_run = resilience.make_dense_run(op, operands, scheds[0], op_kwargs)
+    p = resilience.guarded_build(
+        lambda: spec.sharded_planner(operands, tuple(scheds), backend,
+                                     part=part, shard_csrs=shard_csrs,
+                                     mesh=mesh, **op_kwargs),
+        op=op, schedule=scheds[0], dense_run=dense_run)
+    if p.source != "guard-dense":
+        p.source = f"sharded-{strategy}"
+    resilience.guard_plan(
+        p, rebuild=lambda b: spec.sharded_planner(
+            operands, tuple(scheds), b, part=part, shard_csrs=shard_csrs,
+            mesh=mesh, **op_kwargs),
+        dense_run=dense_run, site="shard-dispatch")
     p.shard_provenance = provenance
     return p
 
@@ -368,4 +398,13 @@ def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
     backend = resolve_backend(backend)
     if store is not None and spec.bucket_store_ok:
         op_kwargs = dict(op_kwargs, store=store)
-    return spec.bucket_planner(members, schedule, backend, **op_kwargs)
+    dense_run = resilience.make_dense_bucket_run(op, members, schedule,
+                                                op_kwargs)
+    p = resilience.guarded_build(
+        lambda: spec.bucket_planner(members, schedule, backend, **op_kwargs),
+        op=op, schedule=schedule, dense_run=dense_run,
+        n_members=len(members))
+    return resilience.guard_plan(
+        p, rebuild=lambda b: spec.bucket_planner(members, schedule, b,
+                                                 **op_kwargs),
+        dense_run=dense_run)

@@ -28,7 +28,6 @@ what make it pay off:
 from __future__ import annotations
 
 import hashlib
-import json
 import os
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -37,8 +36,12 @@ import jax
 import numpy as np
 
 from ..core.csr import CSR
+from .resilience import (InjectedFault, atomic_write_json, checksum_entries,
+                         fault_fired, load_json_guarded, note_recovery,
+                         verify_entries)
 
-STORE_INDEX_VERSION = 1
+# v2: per-entry crc32 checksums + guarded (skip-and-count) load
+STORE_INDEX_VERSION = 2
 
 # Default device-byte budget of a store: enough for serving working sets,
 # small enough that an unbounded stream of distinct matrices cannot pin
@@ -136,6 +139,9 @@ class PreparedStore:
         self.evictions = 0
         self.rejected = 0
         self.invalidated = 0
+        self.fault_evictions = 0   # injected store-evict faults absorbed
+        self.save_failures = 0
+        self.corrupt_loads = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -147,6 +153,15 @@ class PreparedStore:
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
+            return None
+        if fault_fired("store-evict", str(key)):
+            # injected fault: lose the entry, recover by serving a miss —
+            # the caller rebuilds exactly as after a real eviction
+            self._entries.pop(key)
+            self.bytes_in_use -= entry[1]
+            self.fault_evictions += 1
+            self.misses += 1
+            note_recovery("store-evict")
             return None
         if not _leaves_alive(entry[0]):
             # a consumer donated the cached buffers — drop the entry and
@@ -209,18 +224,27 @@ class PreparedStore:
     # was and how big its working set ran, which is what save()/load() carry
     # (the ScheduleCache JSON pattern: atomic tmp+rename, versioned format).
 
-    def save(self, path: str) -> None:
-        """Persist the store's index + telemetry as JSON (atomic)."""
+    def save(self, path: str) -> bool:
+        """Persist the store's index + telemetry as JSON: checksummed
+        entries, unique temp file + fsync + ``os.replace`` — a crash (or
+        injected cache-write fault) mid-save leaves the previous index
+        intact. Returns False (and counts) instead of raising on failure:
+        losing an index snapshot must never take the serving loop down."""
         payload = {
             "version": STORE_INDEX_VERSION,
             "telemetry": self.telemetry(),
-            "entries": [{"key": repr(k), "nbytes": nb}
-                        for k, (_, nb) in self._entries.items()],
+            "entries": checksum_entries(
+                [{"key": repr(k), "nbytes": nb}
+                 for k, (_, nb) in self._entries.items()]),
         }
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        try:
+            atomic_write_json(path, payload)
+        except (RuntimeError, OSError) as e:
+            self.save_failures += 1
+            if isinstance(e, InjectedFault):
+                note_recovery(e.site)
+            return False
+        return True
 
     def load(self, path: str) -> Dict:
         """Load a prior run's index + telemetry for reporting context.
@@ -229,17 +253,24 @@ class PreparedStore:
         rebuild lazily on first touch. The prior counters surface in
         ``telemetry()`` under ``prior_*`` so a restarted server can report
         its steady-state hit-rate expectation before the new process has
-        warmed up. A missing or stale-format file loads as empty context.
+        warmed up. A missing, stale-format, truncated, or bit-flipped file
+        loads as empty-or-partial context (corrupt entries skipped and
+        counted) — cold start from empty, never a crash.
         """
         self.prior: Dict = {}
-        if not os.path.exists(path):
+        payload = load_json_guarded(path)
+        if payload is None:
+            if os.path.exists(path):
+                self.corrupt_loads += 1
             return self.prior
-        with open(path) as f:
-            payload = json.load(f)
         if payload.get("version") != STORE_INDEX_VERSION:
             return self.prior
-        self.prior = {"telemetry": payload.get("telemetry", {}),
-                      "entries": payload.get("entries", [])}
+        raw = payload.get("entries", [])
+        entries, corrupt = verify_entries(raw if isinstance(raw, list) else [])
+        self.corrupt_loads += corrupt
+        tel = payload.get("telemetry", {})
+        self.prior = {"telemetry": tel if isinstance(tel, dict) else {},
+                      "entries": entries}
         return self.prior
 
     def telemetry(self) -> Dict[str, float]:
@@ -254,6 +285,9 @@ class PreparedStore:
             "evictions": float(self.evictions),
             "rejected": float(self.rejected),
             "invalidated": float(self.invalidated),
+            "fault_evictions": float(self.fault_evictions),
+            "save_failures": float(self.save_failures),
+            "corrupt_loads": float(self.corrupt_loads),
             "hit_rate": self.hits / lookups if lookups else 0.0,
         }
         prior = getattr(self, "prior", None)

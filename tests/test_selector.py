@@ -11,6 +11,7 @@ from repro.core.autotune import Schedule, _modeled_time, candidate_schedules
 from repro.core.csr import CSR
 from repro.selector import (ScheduleCache, SchedulePredictor, SelectorService,
                             fingerprint, schedule_from_dict, schedule_to_dict)
+from repro.selector.cache import CACHE_FORMAT_VERSION
 
 TRAIN = corpus(n_matrices=27, n_min=256, n_max=768, seed=3)
 HELD = corpus(n_matrices=18, n_min=256, n_max=768, seed=91,
@@ -113,7 +114,8 @@ def test_cache_persistence_roundtrip(tmp_path):
     cache.flush()
     with open(path) as f:
         raw = json.load(f)
-    assert raw["version"] == 1 and len(raw["entries"]) == 1
+    assert raw["version"] == CACHE_FORMAT_VERSION
+    assert len(raw["entries"]) == 1
     reloaded = ScheduleCache(path=path)
     assert reloaded.get(fp) == sched
     # reopening with a smaller capacity trims from the LRU end
