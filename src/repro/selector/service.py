@@ -250,9 +250,12 @@ class SelectorService:
                 pred.confidence < self.confidence_threshold:
             if self.degraded:
                 # degraded mode: shed the verify sweep, serve the tree pick
+                # — but do NOT cache it: a low-confidence decision made
+                # under pressure must not outlive the degraded window as a
+                # normal (persisted) cache hit; the next non-degraded
+                # lookup re-decides through the full verify path
                 self._counts["degraded_served"] += 1
                 self._counts["tree_served"] += 1
-                self.cache.put(fp, pred.schedule, "tree", pred.tree_time_s)
                 return Decision(req.name, pred.schedule, "tree",
                                 pred.confidence, fp.key, pred.tree_time_s,
                                 batch_id, ck=req.ck)
@@ -367,7 +370,7 @@ class SelectorService:
                 bucket_plan = plan_bucket(
                     "spmv", [req.csr for req, _ in grp],
                     grp[0][1].schedule, backend=backend,
-                    store=self.prepared_store,
+                    store=self.prepared_store, executor=self.executor,
                     member_keys=(mks if all(mks) else None))
                 return bucket_plan.execute([req.x for req, _ in grp])
 
@@ -449,6 +452,7 @@ class SelectorService:
         out["guard_nan_trips"] = ex["nan_trips"]
         out["guard_dense_served"] = ex["dense_served"]
         out["guard_quarantine_skips"] = ex["quarantine_skips"]
+        out["guard_quarantine_overrides"] = ex["quarantine_overrides"]
         q = self.quarantine.telemetry()
         out["quarantine_entries"] = q["entries"]
         out["quarantine_entered"] = q["entered"]

@@ -29,7 +29,7 @@ tests can assert a bucket compiles once and launches once.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +56,7 @@ from ..kernels.moe_gmm.ref import ref_gmm
 from .plan import Plan, _bump_trace
 from .prepared import PreparedStore, array_key, bucket_edge, content_key
 from .registry import register_op
-from .resilience import check_fault, register_dense_ref
+from .resilience import check_fault, dense_ref_cap, register_dense_ref
 from .tensor import ShardedMeta, ShardedSparseTensor, SparseTensor
 
 MATVEC_LAYOUTS = ("ell", "sell", "dense")
@@ -1247,9 +1247,42 @@ register_op(
 # dense references — the guard's terminal fallback rung (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 # Pure-numpy implementations matched to each op's execute() contract: same
-# runtime signature, same output container, no jax in the loop. A builder
-# raises TypeError for operand types it cannot reference; the guard then
-# simply has no dense rung and the chain ends at jnp.
+# runtime signature, same output container, no jax in the loop. Builders
+# are LAZY by contract (resilience._DENSE_REFS): the builder call does only
+# cheap type + size-cap validation — raising TypeError means the guard has
+# no dense rung and the chain ends at jnp — while the O(n*m) densification
+# is deferred (and memoized) inside the returned run, so plan() never
+# materializes a dense copy unless the guard actually falls to this rung.
+
+def _dense_elems(a) -> int:
+    """Element count the dense reference would materialize for one operand
+    (cheap: shapes only). Raises TypeError for operand types with no dense
+    reference — the same signal `_dense_of` would give, moved to plan time."""
+    if isinstance(a, (CSR, BSR)):
+        n, m = a.shape
+        return int(n) * int(m)
+    if isinstance(a, SparseTensor):
+        if a.layout == "dense":
+            tr, tc = a.true_shape
+            return int(tr) * int(tc)
+        raise TypeError(f"no dense reference for a prepared {a.layout!r} "
+                        "SparseTensor (plan from the CSR to enable the "
+                        "dense rung)")
+    if isinstance(a, np.ndarray):
+        return int(a.size)
+    raise TypeError(f"no dense reference for operand {type(a).__name__}")
+
+
+def _dense_check(a) -> None:
+    """Plan-time eligibility gate for the dense rung: unsupported operand
+    types and over-cap shapes raise TypeError (→ no dense rung) WITHOUT
+    touching any data, so planning a huge matrix never OOMs here."""
+    elems = _dense_elems(a)
+    cap = dense_ref_cap()
+    if elems > cap:
+        raise TypeError(f"dense reference refused: {elems} elements exceeds "
+                        f"the {cap}-element cap (REPRO_DENSE_REF_MAX_ELEMS)")
+
 
 def _dense_of(a) -> np.ndarray:
     if isinstance(a, CSR):
@@ -1268,6 +1301,21 @@ def _dense_of(a) -> np.ndarray:
     raise TypeError(f"no dense reference for operand {type(a).__name__}")
 
 
+def _lazy_dense(a) -> Callable[[], np.ndarray]:
+    """Deferred, memoized densification: the dense copy is built on the
+    first call — i.e. only once the guard has actually fallen to the dense
+    rung — and reused across subsequent launches of the same plan."""
+    _dense_check(a)
+    box: list = []
+
+    def get() -> np.ndarray:
+        if not box:
+            box.append(_dense_of(a))
+        return box[0]
+
+    return get
+
+
 def _dense_to_bsr(dense: np.ndarray, bs: int) -> BSR:
     """Re-block a dense product into the BSR container spgemm/spadd
     callers expect (block structure may differ from the symbolic union —
@@ -1277,35 +1325,36 @@ def _dense_to_bsr(dense: np.ndarray, bs: int) -> BSR:
 
 def _dense_ref_matvec(operands, schedule, **_):
     (a,) = operands
-    ad = _dense_of(a)
+    ad = _lazy_dense(a)
 
     def run(x):
+        d = ad()
         x = np.asarray(x, np.float32)
-        if x.shape[0] > ad.shape[1]:    # bucket-padded RHS: pad is zeros
-            x = x[: ad.shape[1]]
-        return ad @ x
+        if x.shape[0] > d.shape[1]:     # bucket-padded RHS: pad is zeros
+            x = x[: d.shape[1]]
+        return d @ x
 
     return run
 
 
 def _dense_ref_spgemm(operands, schedule, block_size: int = 128, **_):
     a, b = operands
-    ad, bd = _dense_of(a), _dense_of(b)
+    ad, bd = _lazy_dense(a), _lazy_dense(b)
     bs = schedule.block_size if schedule is not None else block_size
 
     def run():
-        return _dense_to_bsr(ad @ bd, bs)
+        return _dense_to_bsr(ad() @ bd(), bs)
 
     return run
 
 
 def _dense_ref_spadd(operands, schedule, block_size: int = 128, **_):
     a, b = operands
-    ad, bd = _dense_of(a), _dense_of(b)
+    ad, bd = _lazy_dense(a), _lazy_dense(b)
     bs = schedule.block_size if schedule is not None else block_size
 
     def run():
-        return _dense_to_bsr(ad + bd, bs)
+        return _dense_to_bsr(ad() + bd(), bs)
 
     return run
 

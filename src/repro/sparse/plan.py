@@ -102,11 +102,13 @@ class Plan:
         return f"plan[{self.op}] {sched} via {self.source}{extra}"
 
 
-def _resolve_with_selector(selector, A: CSR, op: str = ""):
+def _resolve_with_selector(selector, A: CSR, op: str = "",
+                           quarantine=None):
     """(Schedule, provenance, operand content key) from a SelectorService
     or a ScheduleTuner. The service already hashed the matrix bytes for its
     fingerprint memo; the key is forwarded so the planner's PreparedStore
-    lookup does not pay a second O(nnz) hashing pass."""
+    lookup does not pay a second O(nnz) hashing pass. ``quarantine`` is the
+    registry the tuner path consults (defaults to the process-wide one)."""
     if not isinstance(A, CSR):
         raise TypeError("selector-based planning needs a CSR first operand, "
                         f"got {type(A).__name__}")
@@ -121,7 +123,8 @@ def _resolve_with_selector(selector, A: CSR, op: str = ""):
     if hasattr(selector, "select"):               # ScheduleTuner
         schedule, info = selector.select(A)
         source = "tuner"
-        q = resilience.default_quarantine()
+        q = (quarantine if quarantine is not None
+             else resilience.default_quarantine())
         if op and schedule is not None \
                 and q.blocked_any_backend(op, schedule):
             # never re-serve a poisoned schedule: re-argmin the candidate
@@ -140,7 +143,9 @@ def _resolve_with_selector(selector, A: CSR, op: str = ""):
 
 def plan(op: str, operands, schedule: Optional[Schedule] = None,
          selector=None, backend: str = "auto",
-         store: Optional[PreparedStore] = None, **op_kwargs) -> Plan:
+         store: Optional[PreparedStore] = None,
+         executor: Optional[resilience.GuardedExecutor] = None,
+         **op_kwargs) -> Plan:
     """Build an executable ``Plan`` for a registered sparse op.
 
     Exactly one schedule source applies: an explicit ``schedule``, a
@@ -153,6 +158,12 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
     operands and skips host prep entirely. When planning through a
     ``SelectorService`` the service's own prepared store is used unless one
     is passed explicitly.
+
+    ``executor`` is the ``GuardedExecutor`` (fallback policy + failure
+    ledger + quarantine) the guard runs under; it defaults to the
+    selector's own executor when planning through a ``SelectorService``,
+    else the process-wide default. Passing one explicitly keeps two
+    services (or threads) from cross-contaminating quarantine state.
     """
     spec = get_op(op)
     if not isinstance(operands, tuple):
@@ -162,9 +173,12 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
     operand_key = None
     if selector is not None and store is None:
         store = getattr(selector, "prepared_store", None)
+    if executor is None and selector is not None:
+        executor = getattr(selector, "executor", None)
+    quarantine = executor.quarantine if executor is not None else None
     if schedule is None and selector is not None:
         schedule, provenance, operand_key = _resolve_with_selector(
-            selector, operands[0], op)
+            selector, operands[0], op, quarantine=quarantine)
     if schedule is not None and schedule.backend != "dense" \
             and spec.layouts and schedule.layout not in spec.layouts:
         raise ValueError(f"op {op!r} supports layouts {spec.layouts}, "
@@ -182,10 +196,10 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
     dense_run = resilience.make_dense_run(op, operands, schedule, op_kwargs)
     p = resilience.guarded_build(
         lambda: spec.planner(operands, schedule, backend, **op_kwargs),
-        op=op, schedule=schedule, dense_run=dense_run)
+        op=op, schedule=schedule, dense_run=dense_run, executor=executor)
     resilience.guard_plan(
         p, rebuild=lambda b: spec.planner(operands, schedule, b, **op_kwargs),
-        dense_run=dense_run)
+        dense_run=dense_run, executor=executor)
     for k, v in provenance.items():
         setattr(p, k, v)
     return p
@@ -196,6 +210,7 @@ def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
                  schedules: Optional[Sequence[Schedule]] = None,
                  selector=None, strategy: str = "nnz", backend: str = "auto",
                  mesh=None, store: Optional[PreparedStore] = None,
+                 executor: Optional[resilience.GuardedExecutor] = None,
                  **op_kwargs) -> Plan:
     """Distributed plan: nnz-balanced row shards, one schedule per shard.
 
@@ -231,6 +246,8 @@ def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
     a = operands[0]
     if selector is not None and store is None:
         store = getattr(selector, "prepared_store", None)
+    if executor is None and selector is not None:
+        executor = getattr(selector, "executor", None)
 
     part = None
     shard_csrs: Optional[List[CSR]] = None
@@ -331,14 +348,14 @@ def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
         lambda: spec.sharded_planner(operands, tuple(scheds), backend,
                                      part=part, shard_csrs=shard_csrs,
                                      mesh=mesh, **op_kwargs),
-        op=op, schedule=scheds[0], dense_run=dense_run)
+        op=op, schedule=scheds[0], dense_run=dense_run, executor=executor)
     if p.source != "guard-dense":
         p.source = f"sharded-{strategy}"
     resilience.guard_plan(
         p, rebuild=lambda b: spec.sharded_planner(
             operands, tuple(scheds), b, part=part, shard_csrs=shard_csrs,
             mesh=mesh, **op_kwargs),
-        dense_run=dense_run, site="shard-dispatch")
+        dense_run=dense_run, site="shard-dispatch", executor=executor)
     p.shard_provenance = provenance
     return p
 
@@ -361,7 +378,9 @@ def _member_layout(m) -> Optional[str]:
 
 def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
                 backend: str = "auto",
-                store: Optional[PreparedStore] = None, **op_kwargs) -> Plan:
+                store: Optional[PreparedStore] = None,
+                executor: Optional[resilience.GuardedExecutor] = None,
+                **op_kwargs) -> Plan:
     """One stacked jitted launch for a whole same-schedule bucket.
 
     ``operands`` is a list of per-member sparse operands (CSR or prepared;
@@ -403,8 +422,8 @@ def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
     p = resilience.guarded_build(
         lambda: spec.bucket_planner(members, schedule, backend, **op_kwargs),
         op=op, schedule=schedule, dense_run=dense_run,
-        n_members=len(members))
+        n_members=len(members), executor=executor)
     return resilience.guard_plan(
         p, rebuild=lambda b: spec.bucket_planner(members, schedule, b,
                                                  **op_kwargs),
-        dense_run=dense_run)
+        dense_run=dense_run, executor=executor)

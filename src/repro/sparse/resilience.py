@@ -16,7 +16,11 @@ loop. This module brings the supervisor posture of
   re-serve them; quarantined picks feed the retraining buffer as negative
   examples (SelectorService wiring). Entries can expire after
   ``ttl_ticks`` serving ticks — a transient fault does not ban a schedule
-  forever.
+  forever. One deliberate exception to "never re-serve": when the
+  quarantined combo is the ONLY remaining rung (or the verify sweep would
+  otherwise be empty), it is served as a last resort and counted
+  (``quarantine_overrides`` on the executor, ``quarantine_overridden`` in
+  SelectorService telemetry) — a degraded answer beats no answer.
 * checksummed atomic persistence helpers (``atomic_write_json`` /
   ``load_json_guarded`` / ``entry_checksum``) — ``ScheduleCache`` and
   ``PreparedStore`` write temp-file + ``os.replace`` and skip-and-count
@@ -74,8 +78,19 @@ class NonFiniteOutput(RuntimeError):
 # purpose: they are caller contract errors (bad layouts, shape mismatches),
 # and masking them behind a fallback would hide real bugs.
 # jax's XlaRuntimeError subclasses RuntimeError, so real launch failures
-# land here too.
-GUARDED_EXCEPTIONS = (RuntimeError, OSError, ArithmeticError)
+# land here too. MemoryError is guarded: an OOM during a build or a lazy
+# densification should walk the ladder (or exhaust it), not unwind the
+# serving loop.
+GUARDED_EXCEPTIONS = (RuntimeError, OSError, ArithmeticError, MemoryError)
+
+
+def dense_ref_cap() -> int:
+    """Max elements per operand the dense reference rung will materialize
+    (``REPRO_DENSE_REF_MAX_ELEMS`` overrides; default 2**26 ≈ 256 MB of
+    float32 per operand). Above the cap an op simply has no dense rung —
+    the ladder ends at jnp instead of OOMing the process on the exact
+    availability path that exists to prevent crashes."""
+    return int(os.environ.get("REPRO_DENSE_REF_MAX_ELEMS", str(1 << 26)))
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +151,13 @@ class FaultInjector:
         return out
 
 
+# Concurrency contract: the module-level defaults below (_INJECTOR,
+# _DEFAULT_QUARANTINE, _DEFAULT_EXECUTOR) are process-wide and
+# unsynchronized — they assume ONE single-threaded serving loop per
+# process. Callers running several services (or threads) should construct
+# their own GuardedExecutor/Quarantine and thread them explicitly through
+# ``plan(..., executor=...)`` / ``SelectorService(executor=...,
+# quarantine=...)``; tests isolate via ``reset_resilience()``.
 _INJECTOR: Optional[FaultInjector] = None
 
 
@@ -190,6 +212,13 @@ class Quarantine:
     after ``ttl_ticks`` serving ticks the entry **expires** and the combo
     gets another chance (``ttl_ticks=None`` = never — a poisoned combo
     stays out until the process restarts).
+
+    Last-resort override: when every alternative is quarantined too — the
+    guard's final rung, or a verify sweep that would otherwise be empty —
+    the quarantined combo IS served rather than failing the request. Each
+    such serve is counted (``GuardedExecutor.quarantine_overrides`` /
+    the service's ``quarantine_overridden``), so the bend in the
+    never-re-serve contract is always observable in telemetry.
     """
 
     def __init__(self, ttl_ticks: Optional[int] = None) -> None:
@@ -264,32 +293,44 @@ class Quarantine:
 # ---------------------------------------------------------------------------
 
 # op name -> builder(operands, schedule, **op_kwargs) -> run(*runtime).
-# Builders raise TypeError for operand types they cannot reference
-# (make_dense_run turns that into "no dense rung", ending the chain at jnp).
+# Builder contract: the builder call itself must be CHEAP — eager type and
+# size-cap validation only (raise TypeError for operands it cannot
+# reference; make_dense_run turns that into "no dense rung", ending the
+# chain at jnp). The O(n*m) densification is deferred inside the returned
+# ``run`` and happens only if the guard actually falls to the dense rung —
+# plan() calls make_dense_run on every build, so an eager to_dense() here
+# would materialize dense copies of every planned operand.
 _DENSE_REFS: Dict[str, Callable] = {}
 
 
 def register_dense_ref(op: str, builder: Callable) -> None:
     """Register the numpy reference implementation used as an op's final
-    fallback rung (ops_builtin registers the six built-in ops)."""
+    fallback rung (ops_builtin registers the six built-in ops). The
+    builder must defer densification into the returned run — see the
+    ``_DENSE_REFS`` contract above."""
     _DENSE_REFS[op] = builder
 
 
 def make_dense_run(op: str, operands, schedule,
                    op_kwargs: Dict) -> Optional[Callable]:
+    """Cheap, plan-time construction of the dense rung: the builder only
+    validates eligibility (types, ``dense_ref_cap``); no dense data exists
+    until the returned run is actually invoked."""
     builder = _DENSE_REFS.get(op)
     if builder is None:
         return None
     try:
         return builder(operands, schedule, **op_kwargs)
     except (TypeError, ValueError):
-        return None     # unsupported operand types: no dense rung
+        return None     # unsupported or over-cap operands: no dense rung
 
 
 def make_dense_bucket_run(op: str, members: Sequence, schedule,
                           op_kwargs: Dict) -> Optional[Callable]:
     """Per-member dense references behind one bucket-shaped entry point
-    (``execute(xs)`` for matvec buckets, ``execute()`` for spgemm/spadd)."""
+    (``execute(xs)`` for matvec buckets, ``execute()`` for spgemm/spadd).
+    Like ``make_dense_run`` this is cheap per tick: member densification
+    is deferred until the bucket actually falls to the dense rung."""
     builder = _DENSE_REFS.get(op)
     if builder is None:
         return None
@@ -312,23 +353,40 @@ def make_dense_bucket_run(op: str, members: Sequence, schedule,
 # guarded execution
 # ---------------------------------------------------------------------------
 
+def _leaf_finite(x: Any) -> bool:
+    """Finiteness of one array leaf. Device (jax) arrays are reduced ON
+    DEVICE via ``jnp.isfinite(...).all()`` and only the scalar verdict
+    crosses to host — the guard never forces a full-output
+    device-to-host copy onto the serving fast path."""
+    dt = getattr(x, "dtype", None)
+    if dt is None:
+        return True
+    if not np.issubdtype(np.dtype(dt), np.floating):
+        return True
+    if isinstance(x, np.ndarray):
+        return bool(np.isfinite(x).all())
+    try:
+        import jax.numpy as jnp
+        return bool(jnp.isfinite(x).all())
+    except (ImportError, TypeError):
+        return bool(np.isfinite(np.asarray(x)).all())
+
+
 def output_finite(out: Any) -> bool:
     """True if every float leaf of an op output is finite. Understands the
     facade's output shapes: arrays (np/jax), BSR results (``.blocks``),
-    and per-member lists from bucket plans."""
+    and per-member lists from bucket plans. Note the check is still a
+    synchronization point (it must block on the result to decide whether
+    to fall back); latency-critical callers can disable it with
+    ``GuardedExecutor(nan_guard=False)`` or ``REPRO_NAN_GUARD=0``."""
     if out is None:
         return True
     if isinstance(out, (list, tuple)):
         return all(output_finite(o) for o in out)
     blocks = getattr(out, "blocks", None)
     if blocks is not None:                      # BSR-like result
-        return bool(np.isfinite(np.asarray(blocks)).all())
-    if hasattr(out, "dtype"):
-        arr = np.asarray(out)
-        if not np.issubdtype(arr.dtype, np.floating):
-            return True
-        return bool(np.isfinite(arr).all())
-    return True
+        return _leaf_finite(blocks)
+    return _leaf_finite(out)
 
 
 class GuardedExecutor:
@@ -341,8 +399,15 @@ class GuardedExecutor:
     """
 
     def __init__(self, quarantine: Optional[Quarantine] = None,
-                 nan_guard: bool = True, max_build_retries: int = 1) -> None:
+                 nan_guard: Optional[bool] = None,
+                 max_build_retries: int = 1) -> None:
         self.quarantine = quarantine if quarantine is not None else Quarantine()
+        # nan_guard=None reads REPRO_NAN_GUARD (default on). The check
+        # synchronizes on each launch's result, so latency-critical
+        # production serving can opt out process-wide via the env var
+        # without touching call sites.
+        if nan_guard is None:
+            nan_guard = os.environ.get("REPRO_NAN_GUARD", "1") != "0"
         self.nan_guard = bool(nan_guard)
         self.max_build_retries = int(max_build_retries)
         self.fallbacks: "Counter[str]" = Counter()   # per op
@@ -352,6 +417,7 @@ class GuardedExecutor:
         self.build_retries = 0
         self.exhausted = 0
         self.quarantine_skips = 0
+        self.quarantine_overrides = 0   # quarantined combo served: last rung
 
     def chain_from(self, backend: str, has_dense: bool) -> List[str]:
         if backend in FALLBACK_CHAIN:
@@ -371,6 +437,7 @@ class GuardedExecutor:
             "build_retries": float(self.build_retries),
             "exhausted": float(self.exhausted),
             "quarantine_skips": float(self.quarantine_skips),
+            "quarantine_overrides": float(self.quarantine_overrides),
         }
 
 
@@ -436,7 +503,11 @@ def guard_plan(p, rebuild: Optional[Callable] = None,
     see a slower answer, never a crash, until the chain is exhausted.
     Rung state persists across ``execute`` calls: a plan that fell to jnp
     stays there instead of re-failing every launch. Already-quarantined
-    rungs are skipped up front, so a poisoned combo is never re-served.
+    rungs are skipped up front, so a poisoned combo is never re-served —
+    with one deliberate exception: on the chain's FINAL rung a quarantined
+    combo is executed anyway (a degraded answer beats no answer). Those
+    last-resort serves are counted in ``quarantine_overrides`` so the
+    contract bend is observable, never silent.
     """
     ex = executor if executor is not None else default_executor()
     chain = ex.chain_from(p.backend, dense_run is not None)
@@ -449,12 +520,13 @@ def guard_plan(p, rebuild: Optional[Callable] = None,
     def guarded(*runtime):
         while True:
             b = chain[state["rung"]]
-            if (b != "dense" and state["rung"] + 1 < len(chain)
-                    and ex.quarantine.blocked(op, b, schedule)):
-                ex.quarantine_skips += 1
-                state["rung"] += 1
-                state["run"] = None
-                continue
+            if b != "dense" and ex.quarantine.blocked(op, b, schedule):
+                if state["rung"] + 1 < len(chain):
+                    ex.quarantine_skips += 1
+                    state["rung"] += 1
+                    state["run"] = None
+                    continue
+                ex.quarantine_overrides += 1    # last rung: serve anyway
             try:
                 if b == "dense":
                     out = dense_run(*runtime)

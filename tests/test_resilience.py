@@ -150,6 +150,57 @@ def test_fallback_chain_bucket_matches_reference():
         np.testing.assert_allclose(np.asarray(yf), yc, rtol=2e-3, atol=2e-3)
 
 
+def test_dense_rung_is_lazy(monkeypatch):
+    """plan() must not materialize the O(n*m) dense reference: the
+    densification happens only when the guard actually falls to the dense
+    rung, and is memoized across launches of the same plan."""
+    from repro.sparse import ops_builtin
+    calls = []
+    orig = ops_builtin._dense_of
+    monkeypatch.setattr(ops_builtin, "_dense_of",
+                        lambda a: (calls.append(1), orig(a))[1])
+    A = _sparse(64, 64, 0.1, 0)
+    x = np.ones(64, np.float32)
+    p = plan("spmv", A, backend="jnp")
+    assert calls == []                    # plan time: no densification
+    p.execute(x)
+    assert calls == []                    # healthy launches: still none
+    install_injector(FaultInjector(1.0, seed=0, sites=("launch",)))
+    p2 = plan("spmv", A, backend="jnp")
+    assert calls == []
+    y = p2.execute(x)                     # falls to dense: densify ONCE
+    assert len(calls) == 1
+    p2.execute(x)                         # memoized across launches
+    assert len(calls) == 1
+    np.testing.assert_allclose(np.asarray(y), A.to_dense() @ x,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_dense_rung_size_cap(monkeypatch):
+    """Over-cap operands have no dense rung at all (the ladder ends at
+    jnp) instead of risking an OOM on the availability path."""
+    monkeypatch.setenv("REPRO_DENSE_REF_MAX_ELEMS", "100")
+    A = _sparse(64, 64, 0.1, 1)          # 4096 elements > 100 cap
+    assert resilience.make_dense_run("spmv", (A,), None, {}) is None
+    x = np.ones(64, np.float32)
+    y = plan("spmv", A, backend="jnp").execute(x)   # normal path unaffected
+    np.testing.assert_allclose(np.asarray(y), A.to_dense() @ x,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_explicit_executor_isolates_quarantine():
+    """Threading an explicit GuardedExecutor through plan() keeps two
+    services from cross-contaminating the process-wide defaults."""
+    ex1 = GuardedExecutor()
+    A = _sparse(64, 64, 0.1, 2)
+    x = np.ones(64, np.float32)
+    install_injector(FaultInjector(1.0, seed=0, sites=("launch",)))
+    plan("spmv", A, backend="interpret", executor=ex1).execute(x)
+    assert ex1.fallbacks["spmv"] >= 2 and len(ex1.quarantine) >= 2
+    assert len(default_quarantine()) == 0         # defaults untouched
+    assert default_executor().fallbacks["spmv"] == 0
+
+
 def test_quarantined_rung_skipped_on_next_plan():
     A = _sparse(64, 64, 0.1, 7)
     x = np.ones(64, np.float32)
@@ -197,6 +248,31 @@ def test_nan_guard_falls_back_and_quarantines():
         assert default_quarantine().blocked("nanop", "interpret", None)
     finally:
         _REGISTRY.pop("nanop", None)
+
+
+def test_quarantine_override_on_last_rung_counted():
+    """A quarantined combo on the chain's ONLY remaining rung is served as
+    a last resort — and the contract bend is counted, never silent."""
+    def planner(operands, schedule, backend, **kw):
+        return Plan(op="solorung", schedule=schedule, backend=backend,
+                    _run=lambda: np.ones(2, np.float32))
+    register_op("solorung", planner, layouts=(), overwrite=True)
+    try:
+        default_quarantine().add("solorung", "jnp", None, reason="test")
+        y = plan("solorung", (), backend="jnp").execute()  # no dense ref
+        assert np.allclose(np.asarray(y), 1.0)             # served anyway
+        assert default_executor().quarantine_overrides >= 1
+        assert default_executor().quarantine_skips == 0
+    finally:
+        _REGISTRY.pop("solorung", None)
+
+
+def test_nan_guard_env_opt_out(monkeypatch):
+    monkeypatch.setenv("REPRO_NAN_GUARD", "0")
+    assert GuardedExecutor().nan_guard is False
+    monkeypatch.setenv("REPRO_NAN_GUARD", "1")
+    assert GuardedExecutor().nan_guard is True
+    assert GuardedExecutor(nan_guard=False).nan_guard is False  # explicit wins
 
 
 def test_prep_fault_degrades_build_to_dense_reference():
@@ -451,6 +527,36 @@ def test_output_finite_handles_op_output_shapes():
     assert resilience.output_finite(Blocks())
     Blocks.blocks = np.array([[np.nan, 1.0]])
     assert not resilience.output_finite(Blocks())
+    # device arrays: reduced on device, only the scalar verdict transfers
+    import jax.numpy as jnp
+    assert resilience.output_finite(jnp.ones(3))
+    assert not resilience.output_finite(jnp.array([1.0, jnp.nan]))
+    assert resilience.output_finite(jnp.array([1, 2], jnp.int32))
+
+
+def test_degraded_pick_is_not_cached(tuner):
+    """A tree pick served under degraded mode must not enter the
+    ScheduleCache: the pressure-shed decision dies with the degraded
+    window instead of being served (and persisted) forever after."""
+    svc = SelectorService(tuner, confidence_threshold=1.1,  # always verify
+                          degraded_cooldown=2, batch_max=4)
+    A = HELD[2][2]
+    fp = fingerprint(A)
+    svc.submit("late", A, deadline_ms=0.0)
+    svc.process_pending()                 # shed -> pressure -> degraded
+    assert svc.degraded
+    svc.submit("now", A)
+    decs = svc.process_pending()          # degraded: tree-served
+    assert decs[0].source == "tree"
+    assert svc.cache.get(fp) is None      # ...but never cached
+    while svc.degraded:                   # drain the cooldown window
+        svc.submit("cool", A)
+        svc.process_pending()
+    assert svc.cache.get(fp) is None      # degraded picks never landed
+    svc.submit("healthy", A)
+    decs = svc.process_pending()          # healthy again: full verify path
+    assert decs[0].source == "verify"
+    assert svc.cache.get(fp) is not None  # the verified pick IS cached
 
 
 # ----------------------------------------------------------- chaos (heavy)
