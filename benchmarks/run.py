@@ -1,8 +1,13 @@
 """Benchmark harness: one module per paper table/figure + the roofline table.
 Prints ``name,us_per_call,derived`` CSV; ``--json OUT`` additionally writes
 ``{name: {"us": float, "derived": str}}`` so BENCH_*.json trajectory points
-are machine-generated instead of scraped from the CSV. Set
-REPRO_BENCH_FULL=1 for the paper-scale corpus (600 matrices)."""
+are machine-generated instead of scraped from the CSV (the committed
+``BENCH_*.json`` files are these, diffable with scripts/bench_compare.py).
+``--trace-out`` records the run through the obs Tracer (one span per bench
+module, plus every plan/launch event the modules trigger) as Chrome-trace
+JSON + a sibling .jsonl event log; ``--metrics-every N`` prints a
+metrics-registry delta after every N modules. Set REPRO_BENCH_FULL=1 for
+the paper-scale corpus (600 matrices)."""
 import argparse
 import json
 import os
@@ -37,6 +42,11 @@ def main(argv=None) -> None:
                     help="substring filter on module names")
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="also write results as JSON to this path")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE_JSON",
+                    help="write a Chrome-trace JSON (+ sibling .jsonl "
+                         "event log) of the bench run")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print a metrics-registry delta every N modules")
     args = ap.parse_args(argv)
     selected = [(name, mod) for name, mod in MODULES
                 if not args.only or args.only in name]
@@ -64,12 +74,25 @@ def main(argv=None) -> None:
                 pass
         except OSError as e:
             ap.error(f"--json: {e}")
+    # observability (DESIGN.md §12): bench modules run inside tracer spans,
+    # so a --trace-out run shows per-module wall-clock and every plan
+    # prep/compile/launch event the modules trigger underneath
+    from repro.obs import Tracer, default_registry, install_tracer
+    registry = default_registry()
+    prev_snapshot = registry.snapshot()
+    trace = None
+    if args.trace_out:
+        trace = install_tracer(Tracer(registry=registry, strict=False))
     results = {}
     print("name,us_per_call,derived")
-    for name, mod in selected:
+    for i, (name, mod) in enumerate(selected, start=1):
         t0 = time.time()
         try:
-            rows = mod.run()
+            if trace is not None:
+                with trace.span("bench", name, module=name):
+                    rows = mod.run()
+            else:
+                rows = mod.run()
         except Exception as e:
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
@@ -80,6 +103,20 @@ def main(argv=None) -> None:
         elapsed_us = (time.time() - t0) * 1e6
         print(f"{name}/elapsed,{elapsed_us:.0f},-")
         results[f"{name}/elapsed"] = {"us": float(elapsed_us), "derived": "-"}
+        if args.metrics_every and i % args.metrics_every == 0:
+            delta = registry.delta(prev_snapshot)
+            prev_snapshot = registry.snapshot()
+            moved = "  ".join(
+                f"{k}={v:g}" for k, v in sorted(delta.items())
+                if k.startswith(("events.", "plan.")))
+            print(f"# metrics after {name}: {moved}", file=sys.stderr)
+    if trace is not None:
+        install_tracer(None)
+        n_events = trace.write_chrome_trace(args.trace_out)
+        stem, _ = os.path.splitext(args.trace_out)
+        trace.write_jsonl(stem + ".jsonl")
+        print(f"# trace: {n_events} events -> {args.trace_out} "
+              f"(+ {stem}.jsonl)", file=sys.stderr)
     if args.json_out:
         tmp = args.json_out + ".tmp"
         with open(tmp, "w") as f:

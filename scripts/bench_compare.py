@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Diff two bench JSONs (benchmarks/run.py --json) and flag regressions.
+
+The committed BENCH_*.json files are the repo's perf trajectory (ROADMAP
+item 3); this tool is the regression edge between any two of them:
+
+    python scripts/bench_compare.py BENCH_0007.json fresh.json
+    python scripts/bench_compare.py BENCH_0007.json fresh.json --strict
+
+Rows present in both files are compared on ``us`` (microseconds per call):
+a row slower by more than ``--threshold`` (default 0.25 = +25%) is flagged
+as a regression, faster by the same margin as an improvement. Added and
+removed rows are listed, never flagged — a partial run (smoke compares the
+selector module against the full committed trajectory) is expected to miss
+most rows. ``/elapsed`` bookkeeping rows are skipped: they time whole
+modules, including fit sweeps whose size legitimately changes run to run.
+
+Exit code is 0 unless ``--strict`` is passed AND regressions were found —
+wall-clock on shared CI runners is noisy, so the default mode is a report,
+not a gate (flip on --strict once the trajectory has enough points to
+separate noise from drift).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def load(path: str) -> Dict[str, Dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise SystemExit(f"{path}: not a bench JSON object")
+    return {k: v for k, v in data.items()
+            if isinstance(v, dict) and isinstance(v.get("us"), (int, float))}
+
+
+def compare(base: Dict[str, Dict], new: Dict[str, Dict],
+            threshold: float) -> Tuple[List[Tuple[str, float, float, float]],
+                                       List[Tuple[str, float, float, float]]]:
+    """(regressions, improvements) as (name, base_us, new_us, ratio)."""
+    regressions, improvements = [], []
+    for name in sorted(set(base) & set(new)):
+        if name.endswith("/elapsed"):
+            continue
+        b, n = float(base[name]["us"]), float(new[name]["us"])
+        if b <= 0.0:
+            continue
+        ratio = n / b
+        if ratio > 1.0 + threshold:
+            regressions.append((name, b, n, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, b, n, ratio))
+    return regressions, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("base", help="baseline bench JSON (e.g. BENCH_0007.json)")
+    ap.add_argument("new", help="fresh bench JSON to compare")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative slowdown that counts as a regression "
+                         "(default 0.25 = +25%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when regressions are found")
+    args = ap.parse_args(argv)
+
+    base, new = load(args.base), load(args.new)
+    shared = set(base) & set(new)
+    added = sorted(set(new) - set(base))
+    removed = sorted(set(base) - set(new))
+    regressions, improvements = compare(base, new, args.threshold)
+
+    print(f"bench_compare: {len(shared)} shared rows "
+          f"({len(added)} only in new, {len(removed)} only in base), "
+          f"threshold +{args.threshold:.0%}")
+    for name, b, n, ratio in regressions:
+        print(f"  REGRESSION {name}: {b:.1f}us -> {n:.1f}us "
+              f"({ratio:.2f}x)")
+    for name, b, n, ratio in improvements:
+        print(f"  improved   {name}: {b:.1f}us -> {n:.1f}us "
+              f"({ratio:.2f}x)")
+    if not regressions and not improvements:
+        print(f"  no rows moved past the threshold")
+    if added:
+        print(f"  new rows: {', '.join(added[:8])}"
+              + (" ..." if len(added) > 8 else ""))
+    if removed:
+        print(f"  missing rows (partial run?): {len(removed)}")
+    if regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

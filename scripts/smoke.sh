@@ -73,21 +73,44 @@ PY
 # output matches the reference, zero unhandled exceptions escape, the
 # telemetry accounts for every injected fault (fired == recovered), and the
 # fallback ladder actually engaged at least once (seed 7 guarantees it).
+# The serve also records itself (--trace-out, DESIGN.md §12): the Chrome
+# trace must parse with only non-negative complete events, the JSONL event
+# log must carry >=1 select, >=1 launch and — under this fault rate — >=1
+# fallback event, and the event total must reconcile with the telemetry.
+# SMOKE_TRACE_OUT (set by CI) persists the trace as a workflow artifact.
 python -m pytest -x -q -m chaos tests/test_resilience.py
-python - <<'PY'
+SMOKE_TRACE_OUT="${SMOKE_TRACE_OUT:-$tmpdir/chaos_trace.json}" python - <<'PY'
+import json, os
 from repro.selector.serve import main
+trace_out = os.environ["SMOKE_TRACE_OUT"]
 tel = main(["--requests", "32", "--train-mats", "9", "--serve-mats", "5",
             "--n-min", "256", "--n-max", "384", "--batch", "8", "--execute",
-            "--fault-rate", "0.2", "--fault-seed", "7"])
+            "--fault-rate", "0.2", "--fault-seed", "7",
+            "--trace-out", trace_out,
+            "--metrics-out", os.path.splitext(trace_out)[0] + "_metrics.json"])
 assert tel["fault_fired"] > 0, tel
 assert tel["fault_fired"] == tel["fault_recovered"], tel
 assert tel["guard_fallbacks"] >= 1, tel
 assert tel["exec_checked"] > 0 and tel["exec_mismatches"] == 0, tel
 assert tel["requests"] == 32.0, tel
+trace = json.load(open(trace_out))
+evs = trace["traceEvents"]
+assert evs and all(e["ph"] == "X" and e["dur"] >= 0 for e in evs), "bad trace"
+assert tel["trace_events"] == float(len(evs)), (tel["trace_events"], len(evs))
+counts = {}
+with open(os.path.splitext(trace_out)[0] + ".jsonl") as f:
+    for line in f:
+        ev = json.loads(line)
+        counts[ev["type"]] = counts.get(ev["type"], 0) + 1
+assert counts.get("select", 0) >= 1, counts
+assert counts.get("launch", 0) >= 1, counts
+assert counts.get("fallback", 0) >= 1, counts   # the ladder engaged
 print(f"chaos smoke OK: {tel['fault_fired']:.0f} faults fired, "
       f"{tel['fault_recovered']:.0f} recovered, "
       f"{tel['guard_fallbacks']:.0f} fallbacks, "
       f"{tel['exec_checked']:.0f} outputs verified")
+print(f"trace smoke OK: {len(evs)} events "
+      + "  ".join(f"{k}={v}" for k, v in sorted(counts.items())))
 PY
 
 # benchmark JSON trajectory emission stays machine-readable; BENCH_JSON_OUT
@@ -100,6 +123,11 @@ data = json.load(open(sys.argv[1]))
 assert data and all(set(r) == {"us", "derived"} for r in data.values()), data
 print(f"smoke OK: {len(data)} bench rows")
 PY
+
+# perf-trajectory diff vs the committed BENCH_0007.json point (non-fatal:
+# bench_compare reports >25% moves but exits 0 without --strict — shared
+# runners are too noisy for a hard wall-clock gate in the smoke path)
+python scripts/bench_compare.py BENCH_0007.json "$bench_json" || true
 
 # zero-rebuild serving rows (DESIGN.md §9): the warm/cold plan_build bench
 # rows must exist, prove the PreparedStore path via hit counters, and show

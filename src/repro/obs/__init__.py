@@ -1,0 +1,21 @@
+"""Observability substrate (DESIGN.md §12): software PMCs + request tracing.
+
+``MetricsRegistry`` is the process-wide counter/gauge/histogram file every
+subsystem ``telemetry()`` is a view over; ``Tracer`` records the typed
+request-path events (``schema.EVENT_TYPES``) and exports JSONL + Chrome
+trace; ``repro.obs.report`` turns traced launches into the perfmodel
+calibration report that closes the measured-latency characterization loop.
+"""
+from .metrics import (HIST_BOUNDS_MS, CounterDict, Histogram,
+                      MetricsRegistry, Scope, default_registry,
+                      reset_default_registry, scoped_int)
+from .schema import (EVENT_FIELDS, EVENT_TYPES, ordered, telemetry_key)
+from .trace import Tracer, emit, install_tracer, span, tracer
+
+__all__ = [
+    "CounterDict", "EVENT_FIELDS", "EVENT_TYPES", "HIST_BOUNDS_MS",
+    "Histogram",
+    "MetricsRegistry", "Scope", "Tracer", "default_registry", "emit",
+    "install_tracer", "ordered", "reset_default_registry", "scoped_int",
+    "span", "telemetry_key", "tracer",
+]

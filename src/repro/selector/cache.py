@@ -19,6 +19,7 @@ from collections import OrderedDict
 from typing import Dict, Optional
 
 from ..core.autotune import Schedule
+from ..obs import default_registry, ordered, scoped_int
 from ..sparse.resilience import (InjectedFault, atomic_write_json,
                                  checksum_entries, fault_fired,
                                  load_json_guarded, note_recovery,
@@ -50,21 +51,26 @@ class ScheduleCache:
     misses instead of handing back wrong-kernel/wrong-platform schedules.
     """
 
+    # counters are views into this cache's MetricsRegistry scope
+    # (DESIGN.md §12) — telemetry() and registry snapshots agree by
+    # construction
+    hits = scoped_int("hits")
+    misses = scoped_int("misses")
+    collisions = scoped_int("collisions")
+    context_misses = scoped_int("context_misses")
+    evictions = scoped_int("evictions")
+    corrupt_entries = scoped_int("corrupt_entries")
+    corrupt_files = scoped_int("corrupt_files")
+    faulted_reads = scoped_int("faulted_reads")
+    flush_failures = scoped_int("flush_failures")
+
     def __init__(self, path: Optional[str] = None, capacity: int = 256,
                  context: str = "") -> None:
+        self._metrics = default_registry().scope("schedule_cache")
         self.path = path
         self.capacity = max(int(capacity), 1)
         self.context = context
         self._entries: "OrderedDict[str, Dict]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.collisions = 0
-        self.context_misses = 0
-        self.evictions = 0
-        self.corrupt_entries = 0
-        self.corrupt_files = 0
-        self.faulted_reads = 0
-        self.flush_failures = 0
         if path is not None and os.path.exists(path):
             self._load(path)
 
@@ -158,7 +164,7 @@ class ScheduleCache:
 
     def telemetry(self) -> Dict[str, float]:
         lookups = self.hits + self.misses
-        return {
+        return ordered({
             "entries": float(len(self._entries)),
             "hits": float(self.hits),
             "misses": float(self.misses),
@@ -170,4 +176,4 @@ class ScheduleCache:
             "faulted_reads": float(self.faulted_reads),
             "flush_failures": float(self.flush_failures),
             "hit_rate": self.hits / lookups if lookups else 0.0,
-        }
+        })

@@ -12,7 +12,7 @@ the simulation verify pass.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -73,11 +73,21 @@ class SchedulePredictor:
 
 
 def retraining_row(fp: Fingerprint, sched: Schedule,
-                   measured_time_s: float) -> Dict:
+                   measured_time_s: float,
+                   measured_ms: Optional[float] = None,
+                   residual: Optional[float] = None) -> Dict:
     """One feedback example in the same (static + cfg) feature space
-    ``ScheduleTuner.fit`` trains on, ready to append to its dataset."""
+    ``ScheduleTuner.fit`` trains on, ready to append to its dataset.
+
+    Every row carries ``measured_ms`` / ``residual`` fields (DESIGN.md
+    §12): None until a guarded launch serves the schedule, then the
+    launch's wall-clock and its log10 residual against the modeled label —
+    the measured-latency signal the calibration report summarizes and
+    future refits can reweight by."""
     return {
         "features": dict(fp.features),
         "cfg": sched.as_features(),
         "log10_time_s": float(np.log10(max(measured_time_s, 1e-12))),
+        "measured_ms": measured_ms,
+        "residual": residual,
     }

@@ -11,12 +11,15 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Optional
 
 import numpy as np
 
 from ..core import PLATFORMS, ScheduleTuner, corpus
+from ..obs import Tracer, default_registry, install_tracer
 from ..sparse import resilience
 from .cache import ScheduleCache
 from .service import SelectorService
@@ -55,8 +58,23 @@ def main(argv: Optional[list] = None) -> dict:
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request admission deadline; requests past it "
                          "are shed, not served late")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE_JSON",
+                    help="write a Chrome-trace/Perfetto JSON of the serve "
+                         "here, plus a sibling .jsonl event log "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print a metrics-registry delta snapshot every N "
+                         "serving ticks (0 = never)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS_JSON",
+                    help="write this run's metrics-registry snapshot delta "
+                         "as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    registry = default_registry()
+    base_snapshot = registry.snapshot()   # per-run delta baseline
+    trace = None
+    if args.trace_out:
+        trace = install_tracer(Tracer(registry=registry))
 
     platform = PLATFORMS[args.platform]
     train = corpus(n_matrices=args.train_mats, n_min=args.n_min,
@@ -101,7 +119,23 @@ def main(argv: Optional[list] = None) -> dict:
               f"seed {args.fault_seed} sites {', '.join(resilience.SITES)}")
 
     t0 = time.time()
-    decisions = svc.run()
+    decisions = []
+    tick = 0
+    prev_snapshot = registry.snapshot()
+    while svc.pending:
+        decisions.extend(svc.process_pending())
+        tick += 1
+        if args.metrics_every and tick % args.metrics_every == 0:
+            delta = registry.delta(prev_snapshot)
+            prev_snapshot = registry.snapshot()
+            moved = {k: v for k, v in delta.items()
+                     if k.split(".")[0] in ("events", "selector",
+                                            "select_ms", "launch_ms")}
+            line = "  ".join(f"{k}={v:g}" for k, v in sorted(moved.items())
+                             if not k.endswith(("p50_ms", "p95_ms",
+                                                "p99_ms", "min_ms",
+                                                "max_ms", "sum_ms")))
+            print(f"[metrics tick {tick}] {line}")
     t_serve = time.time() - t0
 
     print(f"\n{'request':28s} {'source':7s} {'conf':>5s} "
@@ -119,6 +153,26 @@ def main(argv: Optional[list] = None) -> dict:
     if inj is not None:
         tel.update(inj.telemetry())
         resilience.install_injector(None)
+
+    # observability exports (DESIGN.md §12): Chrome-trace JSON + JSONL event
+    # log, and the run's metrics-registry delta — the per-event counts of
+    # the two must reconcile exactly (asserted by tests/test_obs.py)
+    if trace is not None:
+        install_tracer(None)
+        n_events = trace.write_chrome_trace(args.trace_out)
+        stem, _ = os.path.splitext(args.trace_out)
+        jsonl_path = stem + ".jsonl"
+        trace.write_jsonl(jsonl_path)
+        counts = trace.counts()
+        tel["trace_events"] = float(n_events)
+        print(f"trace: {n_events} events -> {args.trace_out} "
+              f"(+ {jsonl_path})  "
+              + "  ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(registry.delta(base_snapshot), f, indent=1,
+                      sort_keys=True)
+        print(f"metrics snapshot delta -> {args.metrics_out}")
 
     # Verify executed outputs — under fault injection this is the
     # acceptance check that fallback-chain results match the reference, not
@@ -170,6 +224,11 @@ def main(argv: Optional[list] = None) -> dict:
     if args.execute:
         print(f"outputs verified vs dense reference: {checked} checked, "
               f"{mismatches} mismatches")
+        n_meas = sum(1 for d in decisions if d.measured_ms is not None)
+        n_resid = sum(1 for d in decisions if d.residual is not None)
+        print(f"measured-latency feedback: {n_meas} decisions carry "
+              f"wall-clock, {n_resid} carry model residuals "
+              f"(report: python -m repro.obs.report <trace>.jsonl)")
     if args.cache_path:
         print(f"cache persisted to {args.cache_path} "
               f"({tel['cache_entries']:.0f} entries)")

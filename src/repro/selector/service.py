@@ -25,6 +25,7 @@ for the whole bucket, not one dispatch per member.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
@@ -32,6 +33,8 @@ import numpy as np
 
 from ..core.autotune import Schedule, ScheduleTuner, _modeled_time
 from ..core.csr import CSR
+from ..obs import CounterDict, default_registry, ordered
+from ..obs import trace as obs_trace
 from ..sparse import resilience
 from ..sparse.resilience import Deadline
 from .cache import ScheduleCache
@@ -60,6 +63,11 @@ class Decision:
     bucket: int = -1         # bucket index within the batch
     y: Optional[np.ndarray] = None   # kernel output when the request carried x
     ck: Optional[str] = None  # exact-bytes content key (PreparedStore reuse)
+    # measured-latency feedback (DESIGN.md §12): per-member wall-clock of
+    # the stacked launch that served this decision, and the log10 residual
+    # against the modeled time the selector promised
+    measured_ms: Optional[float] = None
+    residual: Optional[float] = None
 
 
 class SelectorService:
@@ -126,16 +134,22 @@ class SelectorService:
         # Fingerprint the same way it reuses its prepared operands.
         self._fp_memo: "OrderedDict[str, Fingerprint]" = OrderedDict()
         self._fp_memo_cap = 4096
-        self._counts = {"requests": 0, "cache_hits": 0, "tree_served": 0,
-                        "verify_fallbacks": 0, "batches": 0, "buckets": 0,
-                        "executed": 0, "stacked_launches": 0, "refits": 0,
-                        "ticks": 0, "fp_memo_hits": 0, "shard_requests": 0,
-                        "sharded_plans": 0, "shed_requests": 0,
-                        "degraded_ticks": 0, "degraded_served": 0,
-                        "quarantine_blocked": 0, "quarantine_overridden": 0,
-                        "negative_examples": 0, "exec_retries": 0,
-                        "failed_executions": 0}
+        # counters live in the process MetricsRegistry (DESIGN.md §12):
+        # every existing ``self._counts[...] += 1`` call site is unchanged,
+        # but telemetry() is now a genuine view over the registry
+        self._metrics = default_registry().scope("selector")
+        self._counts = CounterDict(self._metrics, (
+            "requests", "cache_hits", "tree_served", "verify_fallbacks",
+            "batches", "buckets", "executed", "stacked_launches", "refits",
+            "ticks", "fp_memo_hits", "shard_requests", "sharded_plans",
+            "shed_requests", "degraded_ticks", "degraded_served",
+            "quarantine_blocked", "quarantine_overridden",
+            "negative_examples", "exec_retries", "failed_executions"))
         self._bucket_sizes: List[int] = []
+        # fp.key -> retraining example appended this tick, so a measured
+        # launch can attach its wall-clock + residual to the example before
+        # refit() consumes it
+        self._examples_by_fp: Dict[str, Dict] = {}
 
     # ------------------------------------------------------------- ingress
     def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None,
@@ -222,6 +236,20 @@ class SelectorService:
         return fp
 
     def _decide(self, req: Request, batch_id: int) -> Decision:
+        """Instrumented decision: a ``select`` span records the outcome
+        (source / schedule / confidence), and the wall-clock of every
+        decision feeds the ``select_ms`` latency histogram."""
+        t0 = time.monotonic()
+        with obs_trace.span("select", req.name) as ev:
+            dec = self._decide_inner(req, batch_id)
+            ev.update(source=dec.source, schedule=str(dec.schedule),
+                      fingerprint=dec.fingerprint_key,
+                      confidence=dec.confidence)
+        self._metrics.registry.observe("select_ms",
+                                       (time.monotonic() - t0) * 1e3)
+        return dec
+
+    def _decide_inner(self, req: Request, batch_id: int) -> Decision:
         fp = self._fingerprint(req)
         cached = self.cache.get(fp)
         if cached is not None and self._quarantined(cached):
@@ -244,6 +272,9 @@ class SelectorService:
             sched, t = self._verify(fp, req.csr)
             self._counts["verify_fallbacks"] += 1
             self.cache.put(fp, sched, "verify", t)
+            ex = retraining_row(fp, sched, t)
+            self.retraining_examples.append(ex)
+            self._examples_by_fp[fp.key] = ex
             return Decision(req.name, sched, "verify", pred.confidence,
                             fp.key, t, batch_id, ck=req.ck)
         if pred.schedule.backend != "dense" and \
@@ -262,7 +293,9 @@ class SelectorService:
             sched, t = self._verify(fp, req.csr)
             self._counts["verify_fallbacks"] += 1
             self.cache.put(fp, sched, "verify", t)
-            self.retraining_examples.append(retraining_row(fp, sched, t))
+            ex = retraining_row(fp, sched, t)
+            self.retraining_examples.append(ex)
+            self._examples_by_fp[fp.key] = ex
             return Decision(req.name, sched, "verify", pred.confidence,
                             fp.key, t, batch_id, ck=req.ck)
         self._counts["tree_served"] += 1
@@ -275,6 +308,7 @@ class SelectorService:
         execution — the request is answered with the default schedule and
         counted, honoring the deadline instead of blowing through it."""
         self._counts["shed_requests"] += 1
+        obs_trace.emit("shed", req.name)
         sched = Schedule("bsr", 128, 1.0, n_rhs=self.tuner.n_rhs)
         return Decision(req.name, sched, "shed", 0.0, "", None, batch_id)
 
@@ -294,6 +328,10 @@ class SelectorService:
                 batch.append(req)
         if not batch and not shed:
             return []
+        # measured-feedback scope is one tick: examples appended while
+        # deciding this batch may receive wall-clock residuals from this
+        # tick's launches, never a later tick's
+        self._examples_by_fp.clear()
         if self.degraded:
             self._counts["degraded_ticks"] += 1
         batch_id = self._counts["batches"]
@@ -372,14 +410,22 @@ class SelectorService:
                     grp[0][1].schedule, backend=backend,
                     store=self.prepared_store, executor=self.executor,
                     member_keys=(mks if all(mks) else None))
-                return bucket_plan.execute([req.x for req, _ in grp])
+                # modeled cost of the stacked launch = sum of the members'
+                # tree/cache predictions, so the launch trace event carries
+                # modeled_ms next to wall-clock (repro.obs.report needs both)
+                modeled = [dec.modeled_time_s for _, dec in grp
+                           if dec.modeled_time_s]
+                if modeled and bucket_plan.modeled_time_s is None:
+                    bucket_plan.modeled_time_s = float(sum(modeled))
+                return bucket_plan, bucket_plan.execute(
+                    [req.x for req, _ in grp])
 
             # bounded retry + exponential backoff (the run_with_restarts
             # supervisor shape, sized for one serving call); the guard's
             # fallback ladder inside the plan absorbs almost everything, so
             # a retry here means the whole chain failed transiently
             try:
-                ys = resilience.with_backoff(
+                bucket_plan, ys = resilience.with_backoff(
                     attempt, max_retries=self.max_retries,
                     base_s=self.backoff_base_s, on_retry=self._on_exec_retry)
             except resilience.GUARDED_EXCEPTIONS as e:
@@ -389,9 +435,29 @@ class SelectorService:
                     resilience.note_recovery(e.site)
                 continue
             self._counts["stacked_launches"] += 1
+            # measured-latency feedback (DESIGN.md §12): the stacked
+            # launch's wall-clock, amortized per member, lands on each
+            # decision and on the retraining example the decision produced
+            # this tick — refit() then carries measured_ms/residual next
+            # to the modeled label, and the calibration report reads the
+            # same residual off the launch events
+            measured_s = bucket_plan.last_measured_s
+            per_member_ms = (measured_s * 1e3 / max(len(grp), 1)
+                             if measured_s is not None else None)
             for (req, dec), y in zip(grp, ys):
                 dec.y = np.asarray(y)
                 self._counts["executed"] += 1
+                if per_member_ms is None:
+                    continue
+                dec.measured_ms = per_member_ms
+                if dec.modeled_time_s and dec.modeled_time_s > 0:
+                    dec.residual = float(
+                        np.log10(max(per_member_ms, 1e-9)
+                                 / (dec.modeled_time_s * 1e3)))
+                ex = self._examples_by_fp.get(dec.fingerprint_key)
+                if ex is not None:
+                    ex["measured_ms"] = dec.measured_ms
+                    ex["residual"] = dec.residual
 
     def _on_exec_retry(self, attempt: int, exc: BaseException) -> None:
         self._counts["exec_retries"] += 1
@@ -461,4 +527,7 @@ class SelectorService:
         inj = resilience.injector()
         if inj is not None:
             out.update(inj.telemetry())
-        return out
+        # deterministic shape (obs/schema.py): canonical snake_case keys in
+        # sorted order, so golden tests and bench JSON stop being
+        # order-fragile
+        return ordered(out)

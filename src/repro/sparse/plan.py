@@ -9,16 +9,22 @@ cost), and a jitted launch. ``plan_bucket`` builds ONE stacked jitted launch
 for a whole same-schedule bucket, closing the PR-2 follow-up where bucket
 members shared a compiled program but not the launch.
 
-Telemetry: module-level launch and trace counters. ``launch_count`` ticks
-once per ``Plan.execute`` (one device program dispatch); ``trace_count``
-ticks when a jitted executor actually retraces. A bucket of N matrices
-executed through one stacked plan bumps the launch counter once, not N
-times — the property the stacked-launch tests assert.
+Telemetry: launch and trace counters, now Software PMCs in the process
+``MetricsRegistry`` (DESIGN.md §12) under ``plan.launches.<op>`` /
+``plan.traces.<key>``. ``launch_count`` ticks once per ``Plan.execute``
+(one device program dispatch); ``trace_count`` ticks when a jitted executor
+actually retraces. A bucket of N matrices executed through one stacked plan
+bumps the launch counter once, not N times — the property the
+stacked-launch tests assert. Every ``execute`` is additionally wall-clock
+timed: the measurement feeds the ``launch_ms.<op>`` latency histogram, the
+``launch`` trace event (measured next to the plan's modeled cost), and the
+``Plan.last_measured_s`` field the selector's residual feedback reads.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import Counter
+import math
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -26,36 +32,39 @@ import numpy as np
 from ..core.autotune import Schedule
 from ..core.csr import BSR, CSR, ELLBSR, SELLBSR
 from ..kernels.common import resolve_backend
+from ..obs import default_registry, trace as obs_trace
 from . import resilience
 from .prepared import PreparedStore
 from .registry import get_op
 from .tensor import SparseTensor
 
-_LAUNCHES: "Counter[str]" = Counter()
-_TRACES: "Counter[str]" = Counter()
-
 
 def _bump_launch(key: str) -> None:
-    _LAUNCHES[key] += 1
+    default_registry().inc(f"plan.launches.{key}")
 
 
 def _bump_trace(key: str) -> None:
-    _TRACES[key] += 1
+    default_registry().inc(f"plan.traces.{key}")
+    obs_trace.emit("compile", f"trace:{key}", key=key)
 
 
 def launch_count(op: Optional[str] = None) -> int:
     """Number of ``Plan.execute`` device launches (per op, or total)."""
-    return _LAUNCHES[op] if op else sum(_LAUNCHES.values())
+    reg = default_registry()
+    return int(round(reg.get(f"plan.launches.{op}") if op
+                     else reg.sum_prefix("plan.launches.")))
 
 
 def trace_count(key: Optional[str] = None) -> int:
     """Number of executor retraces (per executor key, or total)."""
-    return _TRACES[key] if key else sum(_TRACES.values())
+    reg = default_registry()
+    return int(round(reg.get(f"plan.traces.{key}") if key
+                     else reg.sum_prefix("plan.traces.")))
 
 
 def reset_counters() -> None:
-    _LAUNCHES.clear()
-    _TRACES.clear()
+    default_registry().clear_prefix("plan.launches.")
+    default_registry().clear_prefix("plan.traces.")
 
 
 @dataclasses.dataclass
@@ -77,12 +86,42 @@ class Plan:
     # with source / fingerprint_key / schedule — the acceptance-level record
     # that each shard's schedule went through the selector independently
     shard_provenance: Optional[List[Dict]] = None
+    # wall-clock of the most recent execute (set per call). With the NaN
+    # guard on (default) the guarded run synchronizes on the result, so
+    # this is end-to-end launch latency, not dispatch-only.
+    last_measured_s: Optional[float] = None
 
     def execute(self, *runtime):
         """Run the planned launch on the runtime inputs (one device program
-        dispatch — stacked plans execute their whole bucket here)."""
+        dispatch — stacked plans execute their whole bucket here), timed:
+        the measurement lands in the ``launch_ms.<op>`` histogram and, when
+        a tracer is installed, in a ``launch`` event carrying measured
+        wall-clock next to the plan's modeled cost — the raw material of
+        the perfmodel calibration report."""
         _bump_launch(self.op)
-        return self._run(*runtime)
+        with obs_trace.span("launch", f"{self.op}") as ev:
+            t0 = time.monotonic()
+            out = self._run(*runtime)
+            dt = time.monotonic() - t0
+            self.last_measured_s = dt
+            s = self.schedule
+            modeled_ms = (self.modeled_time_s * 1e3
+                          if self.modeled_time_s else None)
+            # backend/layout read AFTER the run: the guard rewrites
+            # ``p.backend`` when the launch fell down the fallback ladder
+            ev.update(op=self.op, backend=self.backend,
+                      layout=(s.layout if s is not None
+                              and s.backend != "dense"
+                              else "dense" if s is not None else "per-shard"),
+                      measured_ms=dt * 1e3, modeled_ms=modeled_ms,
+                      source=self.source, n_members=self.n_members,
+                      n_shards=self.n_shards)
+        reg = default_registry()
+        reg.observe(f"launch_ms.{self.op}", dt * 1e3)
+        if modeled_ms:
+            reg.observe(f"residual_log10.{self.op}",
+                        math.log10(max(dt * 1e3, 1e-9) / modeled_ms))
+        return out
 
     __call__ = execute
 
@@ -194,9 +233,10 @@ def plan(op: str, operands, schedule: Optional[Schedule] = None,
     # retry, persistent ones degrade to the op's dense reference; every
     # execute runs through the backend fallback ladder
     dense_run = resilience.make_dense_run(op, operands, schedule, op_kwargs)
-    p = resilience.guarded_build(
-        lambda: spec.planner(operands, schedule, backend, **op_kwargs),
-        op=op, schedule=schedule, dense_run=dense_run, executor=executor)
+    with obs_trace.span("prep", f"plan:{op}", op=op):
+        p = resilience.guarded_build(
+            lambda: spec.planner(operands, schedule, backend, **op_kwargs),
+            op=op, schedule=schedule, dense_run=dense_run, executor=executor)
     resilience.guard_plan(
         p, rebuild=lambda b: spec.planner(operands, schedule, b, **op_kwargs),
         dense_run=dense_run, executor=executor)
@@ -344,11 +384,13 @@ def plan_sharded(op: str, operands, n_shards: Optional[int] = None,
         if ck is not None:
             op_kwargs.setdefault("operand_key", ck)
     dense_run = resilience.make_dense_run(op, operands, scheds[0], op_kwargs)
-    p = resilience.guarded_build(
-        lambda: spec.sharded_planner(operands, tuple(scheds), backend,
-                                     part=part, shard_csrs=shard_csrs,
-                                     mesh=mesh, **op_kwargs),
-        op=op, schedule=scheds[0], dense_run=dense_run, executor=executor)
+    with obs_trace.span("prep", f"plan_sharded:{op}", op=op,
+                        n_shards=n_parts):
+        p = resilience.guarded_build(
+            lambda: spec.sharded_planner(operands, tuple(scheds), backend,
+                                         part=part, shard_csrs=shard_csrs,
+                                         mesh=mesh, **op_kwargs),
+            op=op, schedule=scheds[0], dense_run=dense_run, executor=executor)
     if p.source != "guard-dense":
         p.source = f"sharded-{strategy}"
     resilience.guard_plan(
@@ -419,10 +461,13 @@ def plan_bucket(op: str, operands: Sequence, schedule: Schedule,
         op_kwargs = dict(op_kwargs, store=store)
     dense_run = resilience.make_dense_bucket_run(op, members, schedule,
                                                 op_kwargs)
-    p = resilience.guarded_build(
-        lambda: spec.bucket_planner(members, schedule, backend, **op_kwargs),
-        op=op, schedule=schedule, dense_run=dense_run,
-        n_members=len(members), executor=executor)
+    with obs_trace.span("prep", f"plan_bucket:{op}", op=op,
+                        n_members=len(members)):
+        p = resilience.guarded_build(
+            lambda: spec.bucket_planner(members, schedule, backend,
+                                        **op_kwargs),
+            op=op, schedule=schedule, dense_run=dense_run,
+            n_members=len(members), executor=executor)
     return resilience.guard_plan(
         p, rebuild=lambda b: spec.bucket_planner(members, schedule, b,
                                                  **op_kwargs),

@@ -36,6 +36,8 @@ import jax
 import numpy as np
 
 from ..core.csr import CSR
+from ..obs import default_registry, ordered, scoped_int
+from ..obs import trace as obs_trace
 from .resilience import (InjectedFault, atomic_write_json, checksum_entries,
                          fault_fired, load_json_guarded, note_recovery,
                          verify_entries)
@@ -129,19 +131,24 @@ class PreparedStore:
     this).
     """
 
+    # counters are views into this store's MetricsRegistry scope
+    # (DESIGN.md §12): telemetry() and registry snapshots agree by
+    # construction, and increments are lock-protected for threaded callers
+    bytes_in_use = scoped_int("bytes_in_use")
+    hits = scoped_int("hits")
+    misses = scoped_int("misses")
+    puts = scoped_int("puts")
+    evictions = scoped_int("evictions")
+    rejected = scoped_int("rejected")
+    invalidated = scoped_int("invalidated")
+    fault_evictions = scoped_int("fault_evictions")
+    save_failures = scoped_int("save_failures")
+    corrupt_loads = scoped_int("corrupt_loads")
+
     def __init__(self, byte_budget: int = DEFAULT_BYTE_BUDGET) -> None:
+        self._metrics = default_registry().scope("prepared_store")
         self.byte_budget = int(byte_budget)
         self._entries: "OrderedDict[Tuple, Tuple[Any, int]]" = OrderedDict()
-        self.bytes_in_use = 0
-        self.hits = 0
-        self.misses = 0
-        self.puts = 0
-        self.evictions = 0
-        self.rejected = 0
-        self.invalidated = 0
-        self.fault_evictions = 0   # injected store-evict faults absorbed
-        self.save_failures = 0
-        self.corrupt_loads = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -162,6 +169,8 @@ class PreparedStore:
             self.fault_evictions += 1
             self.misses += 1
             note_recovery("store-evict")
+            obs_trace.emit("store_evict", "fault", reason="fault",
+                           nbytes=entry[1])
             return None
         if not _leaves_alive(entry[0]):
             # a consumer donated the cached buffers — drop the entry and
@@ -171,6 +180,8 @@ class PreparedStore:
             self.bytes_in_use -= entry[1]
             self.invalidated += 1
             self.misses += 1
+            obs_trace.emit("store_evict", "donated", reason="donated",
+                           nbytes=entry[1])
             return None
         self._entries.move_to_end(key)
         self.hits += 1
@@ -192,6 +203,7 @@ class PreparedStore:
             _, (_, freed) = self._entries.popitem(last=False)
             self.bytes_in_use -= freed
             self.evictions += 1
+            obs_trace.emit("store_evict", "lru", reason="lru", nbytes=freed)
         # a lone over-budget survivor cannot happen (rejected above), but an
         # exactly-at-budget single entry is fine — loop guard keeps >= 1.
         return True
@@ -296,4 +308,4 @@ class PreparedStore:
             out["prior_entries"] = float(len(prior.get("entries", [])))
             out["prior_hit_rate"] = float(ptel.get("hit_rate", 0.0))
             out["prior_bytes_in_use"] = float(ptel.get("bytes_in_use", 0.0))
-        return out
+        return ordered(out)

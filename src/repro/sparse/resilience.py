@@ -49,6 +49,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import default_registry, ordered, scoped_int
+from ..obs import trace as obs_trace
+
 # Ordered fallback ladder. A guarded launch starts at its plan's backend and
 # only ever moves right; "dense" is the per-op numpy reference of last
 # resort (registered via register_dense_ref), not a Schedule backend.
@@ -148,7 +151,7 @@ class FaultInjector:
         for site in self.sites:
             if self.fired[site]:
                 out[f"fault_fired_{site}"] = float(self.fired[site])
-        return out
+        return ordered(out)
 
 
 # Concurrency contract: the module-level defaults below (_INJECTOR,
@@ -221,13 +224,18 @@ class Quarantine:
     never-re-serve contract is always observable in telemetry.
     """
 
+    # counters live in the process MetricsRegistry (DESIGN.md §12): the
+    # attributes below are views into this instance's registry scope, so
+    # ``telemetry()`` and a registry ``snapshot()`` can never disagree
+    entered = scoped_int("entered")
+    expired = scoped_int("expired")
+    blocked_hits = scoped_int("blocked_hits")
+
     def __init__(self, ttl_ticks: Optional[int] = None) -> None:
+        self._metrics = default_registry().scope("quarantine")
         self.ttl_ticks = ttl_ticks
         self._entries: Dict[Tuple, Dict] = {}
         self._tick = 0
-        self.entered = 0
-        self.expired = 0
-        self.blocked_hits = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -240,6 +248,9 @@ class Quarantine:
         key = self._key(op, backend, schedule)
         if key not in self._entries:
             self.entered += 1
+            obs_trace.emit("quarantine", f"{op}:{backend}", op=op,
+                           backend=backend, reason=reason,
+                           schedule=str(schedule))
         self._entries[key] = {
             "op": op, "backend": backend, "schedule": schedule,
             "reason": reason, "entered_tick": self._tick,
@@ -280,12 +291,12 @@ class Quarantine:
         self._entries.clear()
 
     def telemetry(self) -> Dict[str, float]:
-        return {
+        return ordered({
             "entries": float(len(self._entries)),
             "entered": float(self.entered),
             "expired": float(self.expired),
             "blocked_hits": float(self.blocked_hits),
-        }
+        })
 
 
 # ---------------------------------------------------------------------------
@@ -398,9 +409,21 @@ class GuardedExecutor:
     dense rungs served, build retries, chains exhausted.
     """
 
+    # registry-backed counter views (DESIGN.md §12); ``fallbacks`` keeps
+    # its per-op Counter shape, with the total mirrored to the scope by
+    # ``count_fallback`` so the registry snapshot carries it too
+    nan_trips = scoped_int("nan_trips")
+    dense_served = scoped_int("dense_served")
+    dense_builds = scoped_int("dense_builds")
+    build_retries = scoped_int("build_retries")
+    exhausted = scoped_int("exhausted")
+    quarantine_skips = scoped_int("quarantine_skips")
+    quarantine_overrides = scoped_int("quarantine_overrides")
+
     def __init__(self, quarantine: Optional[Quarantine] = None,
                  nan_guard: Optional[bool] = None,
                  max_build_retries: int = 1) -> None:
+        self._metrics = default_registry().scope("guarded_executor")
         self.quarantine = quarantine if quarantine is not None else Quarantine()
         # nan_guard=None reads REPRO_NAN_GUARD (default on). The check
         # synchronizes on each launch's result, so latency-critical
@@ -411,13 +434,10 @@ class GuardedExecutor:
         self.nan_guard = bool(nan_guard)
         self.max_build_retries = int(max_build_retries)
         self.fallbacks: "Counter[str]" = Counter()   # per op
-        self.nan_trips = 0
-        self.dense_served = 0
-        self.dense_builds = 0
-        self.build_retries = 0
-        self.exhausted = 0
-        self.quarantine_skips = 0
-        self.quarantine_overrides = 0   # quarantined combo served: last rung
+
+    def count_fallback(self, op: str) -> None:
+        self.fallbacks[op] += 1
+        self._metrics.inc("fallbacks")
 
     def chain_from(self, backend: str, has_dense: bool) -> List[str]:
         if backend in FALLBACK_CHAIN:
@@ -429,8 +449,8 @@ class GuardedExecutor:
         return chain or [backend]
 
     def telemetry(self) -> Dict[str, float]:
-        return {
-            "fallbacks": float(sum(self.fallbacks.values())),
+        return ordered({
+            "fallbacks": self._metrics.get("fallbacks"),
             "nan_trips": float(self.nan_trips),
             "dense_served": float(self.dense_served),
             "dense_builds": float(self.dense_builds),
@@ -438,7 +458,7 @@ class GuardedExecutor:
             "exhausted": float(self.exhausted),
             "quarantine_skips": float(self.quarantine_skips),
             "quarantine_overrides": float(self.quarantine_overrides),
-        }
+        })
 
 
 _DEFAULT_QUARANTINE = Quarantine()
@@ -523,6 +543,10 @@ def guard_plan(p, rebuild: Optional[Callable] = None,
             if b != "dense" and ex.quarantine.blocked(op, b, schedule):
                 if state["rung"] + 1 < len(chain):
                     ex.quarantine_skips += 1
+                    obs_trace.emit("fallback", f"{op}:{b}", op=op,
+                                   from_backend=b,
+                                   to_backend=chain[state["rung"] + 1],
+                                   reason="quarantined")
                     state["rung"] += 1
                     state["run"] = None
                     continue
@@ -556,7 +580,11 @@ def guard_plan(p, rebuild: Optional[Callable] = None,
                     ex.exhausted += 1
                     raise
                 _note_handled(e)
-                ex.fallbacks[op] += 1
+                ex.count_fallback(op)
+                obs_trace.emit("fallback", f"{op}:{b}", op=op,
+                               from_backend=b,
+                               to_backend=chain[state["rung"] + 1],
+                               reason=type(e).__name__)
                 state["rung"] += 1
                 state["run"] = None
 

@@ -240,7 +240,11 @@ def test_selector_feeds_verify_results_back(tuner):
     assert decisions[0].modeled_time_s == pytest.approx(t_best)
     assert len(svc.retraining_examples) == 1
     row = svc.retraining_examples[0]
-    assert set(row) == {"features", "cfg", "log10_time_s"}
+    assert set(row) == {"features", "cfg", "log10_time_s",
+                        "measured_ms", "residual"}
+    # no execution happened (no RHS submitted), so the measured-latency
+    # fields exist but stay unfilled (DESIGN.md §12)
+    assert row["measured_ms"] is None and row["residual"] is None
 
 
 def _schedule_dense(A, sched):
