@@ -6,6 +6,13 @@ item 3); this tool is the regression edge between any two of them:
 
     python scripts/bench_compare.py BENCH_0007.json fresh.json
     python scripts/bench_compare.py BENCH_0007.json fresh.json --strict
+    python scripts/bench_compare.py latest fresh.json
+
+``latest`` as the baseline resolves to the highest-numbered committed
+``BENCH_NNNN.json`` next to this script's repo root — CI jobs compare a
+fresh run against the newest trajectory point without hardcoding its name
+into the workflow (which would silently pin the gate to a stale baseline
+as new points land).
 
 Rows present in both files are compared on ``us`` (microseconds per call):
 a row slower by more than ``--threshold`` (default 0.25 = +25%) is flagged
@@ -23,9 +30,27 @@ separate noise from drift).
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
+import re
 import sys
 from typing import Dict, List, Tuple
+
+
+def resolve_latest(search_dir: str = None) -> str:
+    """Highest-numbered BENCH_NNNN.json in the repo root (the newest
+    committed trajectory point)."""
+    root = search_dir or os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))
+    candidates = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if m:
+            candidates.append((int(m.group(1)), path))
+    if not candidates:
+        raise SystemExit(f"--baseline latest: no BENCH_NNNN.json in {root}")
+    return max(candidates)[1]
 
 
 def load(path: str) -> Dict[str, Dict]:
@@ -58,7 +83,9 @@ def compare(base: Dict[str, Dict], new: Dict[str, Dict],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("base", help="baseline bench JSON (e.g. BENCH_0007.json)")
+    ap.add_argument("base", help="baseline bench JSON (e.g. BENCH_0007.json),"
+                    " or 'latest' for the highest-numbered committed"
+                    " BENCH_NNNN.json")
     ap.add_argument("new", help="fresh bench JSON to compare")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="relative slowdown that counts as a regression "
@@ -67,7 +94,10 @@ def main(argv=None) -> int:
                     help="exit 1 when regressions are found")
     args = ap.parse_args(argv)
 
-    base, new = load(args.base), load(args.new)
+    base_path = (resolve_latest() if args.base == "latest" else args.base)
+    if base_path != args.base:
+        print(f"bench_compare: baseline 'latest' -> {base_path}")
+    base, new = load(base_path), load(args.new)
     shared = set(base) & set(new)
     added = sorted(set(new) - set(base))
     removed = sorted(set(base) - set(new))

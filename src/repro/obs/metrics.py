@@ -214,9 +214,12 @@ class MetricsRegistry:
                        if k.startswith(prefix))
 
     def clear_prefix(self, prefix: str) -> None:
+        """Drop every counter, gauge, and histogram under ``prefix`` — one
+        subsystem's slate wiped without touching its neighbours'."""
         with self._lock:
-            for k in [k for k in self._counters if k.startswith(prefix)]:
-                del self._counters[k]
+            for store in (self._counters, self._gauges, self._hists):
+                for k in [k for k in store if k.startswith(prefix)]:
+                    del store[k]
 
     # --------------------------------------------------------------- gauges
     def set_gauge(self, name: str, value: float) -> None:

@@ -28,9 +28,15 @@ from typing import Dict, Mapping, Tuple
 #   quarantine  an (op, backend, schedule) combo entered the quarantine
 #   shed        a deadline-expired request was answered without selection
 #   store_evict PreparedStore dropped an entry (LRU pressure or injected fault)
+#
+# Serving-engine events (DESIGN.md §13) — the continuous-batching engine's
+# request lifecycle, reconciled against the registry exactly like the rest:
+#   enqueue     a request hit the engine's bounded queue (queued or rejected)
+#   admit       a queued request passed admission into a slot
+#   drain       one engine tick drained one slot as ONE stacked launch (span)
 EVENT_TYPES: Tuple[str, ...] = (
     "select", "prep", "compile", "launch", "fallback", "quarantine",
-    "shed", "store_evict",
+    "shed", "store_evict", "enqueue", "admit", "drain",
 )
 
 # Required ``args`` fields per event type — the golden-schema contract a
@@ -45,6 +51,9 @@ EVENT_FIELDS: Dict[str, Tuple[str, ...]] = {
     "quarantine": ("op", "backend", "reason"),
     "shed": ("name",),
     "store_evict": ("reason",),
+    "enqueue": ("name", "outcome"),
+    "admit": ("name", "slot"),
+    "drain": ("slot", "n_requests"),
 }
 
 # Telemetry keys are flat snake_case identifiers: lowercase alphanumerics

@@ -184,6 +184,14 @@ class SelectorService:
         return decs
 
     # ----------------------------------------------------------- resilience
+    def enter_degraded(self, reason: str = "pressure") -> None:
+        """External pressure signal — the serving engine's queue-depth
+        soft watermark (DESIGN.md §13) calls this when the queue backs up:
+        the verify sweep is shed for the next ``degraded_cooldown`` ticks,
+        exactly as if the pressure had originated inside the service."""
+        self._degraded_until = (self._counts["ticks"]
+                                + self.degraded_cooldown)
+
     @property
     def degraded(self) -> bool:
         """True while the service is under pressure (recent sheds, execution
@@ -375,6 +383,51 @@ class SelectorService:
         while self.pending:
             out.extend(self.process_pending(backend))
         return out
+
+    def drain_bucket(self, members: List[Tuple[Request, Decision]],
+                     backend: str = "jnp") -> List[Decision]:
+        """Engine-driven drain path (DESIGN.md §13): execute one
+        pre-bucketed group of already-decided requests as ONE stacked
+        launch, then advance the serving clock.
+
+        ``process_pending`` owns the whole tick (drain queue, decide,
+        bucket, execute); the continuous-batching engine instead decides at
+        admission time (``select``), holds requests in schedule-keyed
+        slots, and hands each slot here when it drains it — so the service
+        keeps ownership of execution (retry/backoff, stacked launch,
+        measured-latency feedback, refit cadence) while the engine owns
+        queueing, admission, and slot policy. Members must share one
+        Schedule (they came from one slot); requests were already counted
+        by ``select`` at admission.
+        """
+        if not members:
+            return []
+        batch_id = self._counts["batches"]
+        self._counts["batches"] += 1
+        for req, dec in members:
+            dec.batch_id = batch_id
+            dec.bucket = 0
+        self._bucket_sizes.append(len(members))
+        self._counts["buckets"] += 1
+        if self.degraded:
+            self._counts["degraded_ticks"] += 1
+        self._execute_bucket(list(members), backend)
+        self._counts["ticks"] += 1
+        self.quarantine.tick()
+        inj = resilience.injector()
+        fired = sum(inj.fired.values()) if inj is not None else 0
+        if self._exec_pressure or fired > self._last_fault_fired:
+            self._degraded_until = (self._counts["ticks"]
+                                    + self.degraded_cooldown)
+        self._exec_pressure = False
+        self._last_fault_fired = fired
+        if self.refit_every and self._counts["ticks"] % self.refit_every == 0:
+            self.refit(min_examples=self.refit_min_examples)
+        # measured-feedback scope ends with the drain: examples appended
+        # while admitting this slot's requests received this launch's
+        # residuals in _execute_bucket; never a later drain's
+        self._examples_by_fp.clear()
+        return [dec for _, dec in members]
 
     def _execute_bucket(self, members: List[Tuple[Request, Decision]],
                         backend: str) -> None:

@@ -1,0 +1,26 @@
+"""Continuous-batching sparse serving engine (DESIGN.md §13).
+
+The subsystem where selection quality (selector), resilience (guarded
+execution, deadlines, shedding), and observability (registry + tracer) are
+measured jointly under load:
+
+    from repro.serving import ServingEngine, generate_trace, replay
+
+    engine = ServingEngine(service, slot_max=8, deadline_ms=50, slo_ms=25)
+    trace = generate_trace(n_requests=256, qps=400, n_tenants=8, seed=0)
+    rep = replay(engine, trace, population)   # throughput / p99 / SLO / shed
+
+CLI: ``python -m repro.serving.serve --requests 64 --qps 200 --execute``.
+"""
+from .admission import BoundedQueue, EngineRequest
+from .engine import ServingEngine
+from .replay import replay, report, tenant_rhs
+from .slots import Slot, SlotTable, slot_label
+from .trace_gen import (TraceRequest, generate_trace, tenant_population,
+                        zipf_weights)
+
+__all__ = [
+    "BoundedQueue", "EngineRequest", "ServingEngine", "Slot", "SlotTable",
+    "TraceRequest", "generate_trace", "replay", "report", "slot_label",
+    "tenant_population", "tenant_rhs", "zipf_weights",
+]

@@ -29,7 +29,7 @@ tests can assert a bucket compiles once and launches once.
 from __future__ import annotations
 
 import functools
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -282,6 +282,115 @@ def _bucket_hosts(members: List, schedule: Schedule, sigma: int) -> List:
     return hosts
 
 
+def _member_tensors(members: List, schedule: Schedule, sigma: int,
+                    shape_bucket: bool, store, member_keys):
+    """Device-resident prepared ``SparseTensor`` per member, through the
+    SAME store key the single-request planner uses — or None when the
+    bucket cannot take the resident-stacking path (no store, unkeyed or
+    non-CSR members).
+
+    Sharing the single-request key is the point: a tenant warmed by either
+    path (a solo ``plan()`` or any earlier bucket) is warm for both, and
+    the serving engine's ``resident(ck)`` slot bit predicts exactly this
+    hit."""
+    if store is None or member_keys is None:
+        return None
+    keys = list(member_keys)
+    if len(keys) != len(members) or not all(keys):
+        return None
+    if not all(isinstance(m, CSR) for m in members):
+        return None
+    sts = []
+    for m, ck in zip(members, keys):
+        skey = ("matvec", ck, schedule, None, sigma, None,
+                bool(shape_bucket))
+        sts.append(_cached(store, skey, lambda m=m: SparseTensor.from_csr(
+            m, schedule=schedule, sigma=sigma,
+            shape_bucket=bool(shape_bucket))))
+    if len({st.layout for st in sts}) != 1:
+        return None
+    return sts
+
+
+def _stack_resident(sts: List, shape_bucket: bool):
+    """Stacked bucket arrays built ON DEVICE from per-member prepared
+    containers (``jnp.pad`` to common edge dims + ``jnp.stack``), or None
+    for layouts without a device formulation.
+
+    This is what makes continuous batching (DESIGN.md §13) pay: under Zipf
+    traffic the exact member composition of a bucket rarely repeats, so the
+    whole-composition cache alone misses constantly — but a composition of
+    *warm members* only costs a device-side stack here (~memcpy), never the
+    host container rebuild + re-upload of the cold path. Pad fills mirror
+    ``_build_matvec_bucket`` exactly: extra ell/sell cells point at the
+    member's own all-zeros block, ``cell_row`` extends the last sorted row
+    (edge mode), ``row_perm`` extends with identity."""
+    layout = sts[0].layout
+    if layout not in ("ell", "sell", "dense"):
+        return None
+    shapes = [st.true_shape for st in sts]
+    if layout == "dense":
+        ds = [st.arrays["dense"] for st in sts]
+        tgt = [max(d.shape[i] for d in ds) for i in (0, 1)]
+        if shape_bucket:
+            tgt = [bucket_edge(t) for t in tgt]
+        arrays = {"dense": jnp.stack([
+            jnp.pad(d, ((0, tgt[0] - d.shape[0]), (0, tgt[1] - d.shape[1])))
+            .astype(jnp.float32) for d in ds])}
+        return {"arrays": arrays, "shapes": shapes, "layout": layout,
+                "bs": sts[0].block_size, "width": int(tgt[1])}
+    bs = sts[0].block_size
+    A = [st.arrays for st in sts]
+    nb = max(a["blocks"].shape[0] for a in A)
+    n_bc = -(-max(s[1] for s in shapes) // bs)
+    if shape_bucket:
+        nb, n_bc = bucket_edge(nb), bucket_edge(n_bc)
+    blocks = jnp.stack([
+        jnp.pad(a["blocks"].astype(jnp.float32),
+                ((0, nb - a["blocks"].shape[0]), (0, 0), (0, 0)))
+        for a in A])
+    if layout == "ell":
+        n_br = max(a["block_indices"].shape[0] for a in A)
+        width = max(a["block_indices"].shape[1] for a in A)
+        if shape_bucket:
+            n_br, width = bucket_edge(n_br), bucket_edge(width)
+        idx, cols = [], []
+        for a in A:
+            bi, bc = a["block_indices"], a["block_cols"]
+            pad2 = ((0, n_br - bi.shape[0]), (0, width - bi.shape[1]))
+            # pad slots point at this member's own all-zeros block
+            idx.append(jnp.pad(bi, pad2,
+                               constant_values=a["blocks"].shape[0] - 1))
+            cols.append(jnp.pad(bc, pad2))
+        arrays = {"block_indices": jnp.stack(idx),
+                  "block_cols": jnp.stack(cols), "blocks": blocks}
+    else:  # sell
+        n_cells = max(a["cell_block"].shape[0] for a in A)
+        n_br = max(a["row_perm"].shape[0] for a in A)
+        if shape_bucket:
+            n_cells, n_br = bucket_edge(n_cells), bucket_edge(n_br)
+        cb, cc, cr, rp = [], [], [], []
+        for a in A:
+            pad1 = ((0, n_cells - a["cell_block"].shape[0]),)
+            cb.append(jnp.pad(a["cell_block"], pad1,
+                              constant_values=a["blocks"].shape[0] - 1))
+            cc.append(jnp.pad(a["cell_col"], pad1))
+            # pad cells extend the member's LAST sorted row (see the host
+            # builder: cell_row must stay nondecreasing for the Pallas
+            # output-residency contract)
+            cr.append(jnp.pad(a["cell_row"], pad1, mode="edge")
+                      if a["cell_row"].shape[0] else
+                      jnp.zeros((n_cells,), a["cell_row"].dtype))
+            perm = a["row_perm"]
+            rp.append(jnp.concatenate([
+                perm, jnp.arange(perm.shape[0], n_br, dtype=perm.dtype)]))
+        arrays = {"cell_block": jnp.stack(cb), "cell_col": jnp.stack(cc),
+                  "cell_row": jnp.stack(cr), "row_perm": jnp.stack(rp),
+                  "blocks": blocks}
+    return {"arrays": arrays, "shapes": shapes, "layout": layout,
+            "bs": bs, "width": int(n_bc * bs)}
+
+
 def _members_key(kind: str, members: List, schedule: Schedule,
                  extra: Tuple = (),
                  member_keys: Optional[Sequence[str]] = None
@@ -310,7 +419,13 @@ def _members_key(kind: str, members: List, schedule: Schedule,
 
 
 def _build_matvec_bucket(members: List, schedule: Schedule, sigma: int,
-                         shape_bucket: bool):
+                         shape_bucket: bool, store=None, member_keys=None):
+    sts = _member_tensors(members, schedule, sigma, shape_bucket, store,
+                          member_keys)
+    if sts is not None:
+        built = _stack_resident(sts, shape_bucket)
+        if built is not None:
+            return built
     hosts = _bucket_hosts(members, schedule, sigma)
     kinds = {("dense" if isinstance(h, np.ndarray) else
               "sell" if isinstance(h, SELLBSR) else "ell") for h in hosts}
@@ -383,17 +498,107 @@ def _build_matvec_bucket(members: List, schedule: Schedule, sigma: int,
             "bs": bs, "width": width}
 
 
+def _plan_matvec_rhs_stacked(members: List, schedule: Schedule,
+                             backend: str, *, op: str, rhs_tile,
+                             sigma: int, store, shape_bucket: bool,
+                             member_keys) -> Plan:
+    """Same-matrix bucket as ONE multi-RHS launch (DESIGN.md §13).
+
+    When every member of a bucket is the same matrix (equal content keys —
+    the hot-tenant case continuous batching exists for: Zipf traffic piles
+    concurrent requests of one matrix), stacking member containers is pure
+    waste — B copies of identical operands. The batch is just the matrix's
+    single prepared container (the same cached ``SparseTensor`` the
+    per-request path uses, so either path warms the other) applied to the
+    members' RHS vectors stacked as columns: SpMV x B == one SpMM. The k
+    dimension is padded to bucket edges so every occupancy in an edge
+    bucket shares one jit key."""
+    inner = _plan_matvec((members[0],), schedule, backend, op=op,
+                         rhs_tile=rhs_tile, sigma=sigma, store=store,
+                         shape_bucket=shape_bucket,
+                         operand_key=member_keys[0])
+    n = len(members)
+
+    def run(xs):
+        if len(xs) != n:
+            raise ValueError(f"bucket has {n} members, got {len(xs)} "
+                             "runtime inputs")
+        xs = [np.asarray(x, np.float32) for x in xs]
+        ndims = {x.ndim for x in xs}
+        if len(ndims) != 1:
+            raise ValueError("stacked launch needs homogeneous runtime "
+                             "inputs (got mixed vector/multi-RHS)")
+        if n == 1:
+            return [inner._run(xs[0])]
+        if ndims == {1}:
+            ks, X = None, np.stack(xs, axis=1)
+        else:
+            ks = [x.shape[1] for x in xs]
+            X = np.concatenate(xs, axis=1)
+        k = X.shape[1]
+        # power-of-two rounding (not bucket_edge): the RHS width is the
+        # jit compile key of the multi-RHS program, and {1,2,4,8,...} is
+        # half the keys of the 1.5x edge ladder — occupancy jitter under
+        # live traffic then never compiles mid-replay once the pow2 rungs
+        # are warm
+        k_pad = (1 << (k - 1).bit_length()) if shape_bucket else k
+        if k_pad != k:
+            X = np.concatenate(
+                [X, np.zeros((X.shape[0], k_pad - k), np.float32)], axis=1)
+        y = inner._run(X)                       # (true_rows, k_pad)
+        if ks is None:
+            return [y[:, i] for i in range(n)]
+        outs, off = [], 0
+        for ki in ks:
+            outs.append(y[:, off:off + ki])
+            off += ki
+        return outs
+
+    return Plan(op=op, schedule=schedule, backend=backend, _run=run,
+                operands=inner.operands, n_members=n)
+
+
+def _pad_member_axis(built: Dict, b_pad: int) -> Dict:
+    """Pad the stacked member axis up to ``b_pad`` with zero members
+    (batch-size bucketing). A zero member is all-zeros arrays: its indices
+    are in range (0), its RHS is zeroed by the launch wrapper, so its
+    output is exactly zero and sliced away — while every occupancy in
+    (prev_edge, b_pad] shares ONE jit compile key instead of one per
+    member count. Continuous batching drains at whatever occupancy the
+    traffic produced; without this, each distinct bucket size pays its own
+    XLA compile."""
+    arrays = {
+        k: (jnp.concatenate(
+            [v, jnp.zeros((b_pad - v.shape[0],) + tuple(v.shape[1:]),
+                          v.dtype)], axis=0)
+            if int(v.shape[0]) < b_pad else v)
+        for k, v in built["arrays"].items()}
+    return {**built, "arrays": arrays}
+
+
 def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
                         op: str = "spmv", rhs_tile: Optional[int] = None,
                         sigma: int = SELL_SIGMA,
                         store: Optional[PreparedStore] = None,
                         shape_bucket: bool = True,
                         member_keys=None, **_) -> Plan:
+    if (store is not None and member_keys is not None
+            and all(member_keys) and len(set(member_keys)) == 1
+            and all(isinstance(m, CSR) for m in members)):
+        # content-pure bucket (affinity slot fill makes these the common
+        # case under Zipf traffic): one prepared container, RHS columns
+        # stacked — no member stacking, no composition cache entry
+        return _plan_matvec_rhs_stacked(
+            members, schedule, backend, op=op, rhs_tile=rhs_tile,
+            sigma=sigma, store=store, shape_bucket=bool(shape_bucket),
+            member_keys=member_keys)
     key = None if store is None else _members_key(
         "matvec_bucket", members, schedule,
         extra=(op, sigma, bool(shape_bucket)), member_keys=member_keys)
-    built = _cached(store, key, lambda: _build_matvec_bucket(
-        members, schedule, sigma, shape_bucket))
+    b_pad = bucket_edge(len(members)) if shape_bucket else len(members)
+    built = _cached(store, key, lambda: _pad_member_axis(
+        _build_matvec_bucket(members, schedule, sigma, shape_bucket,
+                             store=store, member_keys=member_keys), b_pad))
     arrays, shapes = built["arrays"], built["shapes"]
     layout, width = built["layout"], built["width"]
     tile = rhs_tile if rhs_tile is not None else (128 if backend == "pallas"
@@ -414,11 +619,11 @@ def _plan_matvec_bucket(members: List, schedule: Schedule, backend: str, *,
         if multi:
             k = xs[0].shape[1]
             k_pad = -(-k // tile) * tile
-            xpad = np.zeros((len(xs), width, k_pad), np.float32)
+            xpad = np.zeros((b_pad, width, k_pad), np.float32)
             for i, x in enumerate(xs):
                 xpad[i, : x.shape[0], :k] = x
         else:
-            xpad = np.zeros((len(xs), width), np.float32)
+            xpad = np.zeros((b_pad, width), np.float32)
             for i, x in enumerate(xs):
                 xpad[i, : x.shape[0]] = x
         ys = _exec_matvec_stacked(arrays, jnp.asarray(xpad), layout=layout,

@@ -208,6 +208,27 @@ class PreparedStore:
         # exactly-at-budget single entry is fine — loop guard keeps >= 1.
         return True
 
+    def resident(self, content_key: str) -> bool:
+        """True when any cached entry's key references this exact-bytes
+        content key — i.e. some prepared product of that matrix (a
+        container, a staged symbolic product, a stacked bucket array) is
+        device-resident right now. The serving engine's slot-based
+        admission (DESIGN.md §13) keys slots on this: a tenant whose
+        operands are resident drains without paying host prep, so resident
+        slots are preferred drain targets. O(entries × key width) per
+        probe, both bounded by the byte budget."""
+
+        def _walk(t: Tuple) -> bool:
+            for el in t:
+                if isinstance(el, tuple):
+                    if _walk(el):
+                        return True
+                elif el == content_key:
+                    return True
+            return False
+
+        return any(_walk(k) for k in self._entries)
+
     def get_or_build(self, key: Optional[Tuple],
                      builder: Callable[[], Any]) -> Any:
         """Cached value for ``key``, building (and inserting) on a miss.
@@ -301,6 +322,13 @@ class PreparedStore:
             "save_failures": float(self.save_failures),
             "corrupt_loads": float(self.corrupt_loads),
             "hit_rate": self.hits / lookups if lookups else 0.0,
+            # eviction pressure (DESIGN.md §13): fraction of inserts the
+            # LRU had to pay for by dropping a colder entry — ~0 while the
+            # working set fits the byte budget, ->1 as a multi-tenant
+            # population thrashes it. The serving bench reports this next
+            # to latency/SLO so byte-budget tuning under real traffic has
+            # its measurement.
+            "eviction_pressure": self.evictions / max(self.puts, 1),
         }
         prior = getattr(self, "prior", None)
         if prior:
