@@ -1,0 +1,167 @@
+"""Dynamic sparsity under churn (DESIGN.md §14).
+
+Two workload families the mutation path exists for:
+
+* Iterative solvers — CG and PageRank loop thousands of ``plan()`` calls
+  over ONE matrix. With a warm ``PreparedStore`` every iteration after the
+  first must collapse to a hash plus a dict lookup (zero host prep, zero
+  retrace); the rows report per-iteration cost with the store's hit count
+  and the process trace count as the receipts.
+* Streaming updates — a matrix whose values churn between solves. The
+  ``mutate -> plan`` row prices ``MutableMatrix.apply_delta`` (device
+  scatter + store rekey, generation bump) per step; the ``rebuild`` row
+  prices what it replaces (full host re-prep of a fresh container per
+  step). The acceptance edge is the speedup column: mutate->plan must be
+  >= 10x cheaper than the rebuild it replaces.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import CSR
+from repro.sparse import (Delta, MutableMatrix, PreparedStore, plan,
+                          trace_count)
+from .common import FULL, Row, time_call
+
+N = 256 if FULL else 160
+STREAM_N = 2048 if FULL else 1536   # rebuild cost must show its O(nnz)
+BS = 16
+SEED = 23
+SOLVER_ITERS = 2000 if FULL else 1000
+STREAM_STEPS = 60 if FULL else 24
+
+
+def _spmv(A: CSR, store: PreparedStore, x: np.ndarray) -> np.ndarray:
+    return np.asarray(plan("spmv", (A,), backend="jnp", store=store,
+                           block_size=BS).execute(x))
+
+
+def _spd_matrix(rng, n: int, density: float = 0.04) -> CSR:
+    """Sparse symmetric diagonally-dominant matrix (CG converges)."""
+    d = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    d = ((d + d.T) / 2).astype(np.float32)
+    d[np.arange(n), np.arange(n)] = np.abs(d).sum(axis=1) + 1.0
+    return CSR.from_dense(d)
+
+
+def _stochastic_matrix(rng, n: int, density: float = 0.04) -> CSR:
+    """Column-stochastic non-negative matrix (PageRank iterates)."""
+    d = ((rng.random((n, n)) < density) *
+         rng.random((n, n))).astype(np.float32)
+    d[np.arange(n), np.arange(n)] += 1e-3   # no dangling columns
+    return CSR.from_dense(d / d.sum(axis=0, keepdims=True))
+
+
+def _cg_row(rng) -> Row:
+    A = _spd_matrix(rng, N)
+    b = rng.standard_normal(N).astype(np.float32)
+    store = PreparedStore()
+    _spmv(A, store, b)                      # warm: prep + compile
+    t0 = trace_count()
+    x = np.zeros(N, np.float32)
+    r = b - _spmv(A, store, x)
+    p = r.copy()
+    rs = float(r @ r)
+    import time
+    start = time.perf_counter()
+    for _ in range(SOLVER_ITERS):
+        Ap = _spmv(A, store, p)
+        alpha = rs / max(float(p @ Ap), 1e-30)
+        x += alpha * p
+        r -= alpha * Ap
+        rs_new = float(r @ r)
+        p = r + (rs_new / max(rs, 1e-30)) * p
+        rs = rs_new
+    us = (time.perf_counter() - start) / SOLVER_ITERS * 1e6
+    resid = float(np.linalg.norm(b - _spmv(A, store, x)) /
+                  np.linalg.norm(b))
+    return ("dynamic_cg_warm", us,
+            f"iters={SOLVER_ITERS};resid={resid:.1e};"
+            f"store_hits={store.hits};retraces={trace_count() - t0}")
+
+
+def _pagerank_row(rng) -> Row:
+    M = _stochastic_matrix(rng, N)
+    store = PreparedStore()
+    d = 0.85
+    r = np.full(N, 1.0 / N, np.float32)
+    _spmv(M, store, r)                      # warm: prep + compile
+    t0 = trace_count()
+    import time
+    start = time.perf_counter()
+    for _ in range(SOLVER_ITERS):
+        r = (1.0 - d) / N + d * _spmv(M, store, r)
+    us = (time.perf_counter() - start) / SOLVER_ITERS * 1e6
+    return ("dynamic_pagerank_warm", us,
+            f"iters={SOLVER_ITERS};mass={float(r.sum()):.3f};"
+            f"store_hits={store.hits};retraces={trace_count() - t0}")
+
+
+def _stream_rows(rng) -> List[Row]:
+    """Streaming value churn: per step, 32 values change and the serving
+    loop needs a fresh executable plan. Timed region is delta + plan — the
+    update operation itself; the solve it feeds is identical either way and
+    is validated once outside the clock."""
+    n = STREAM_N
+    A = _spd_matrix(rng, n, density=0.02)
+    x = rng.standard_normal(n).astype(np.float32)
+    lens = np.diff(A.row_ptrs)
+    rows = np.repeat(np.arange(n), lens)
+
+    def _delta(k: int = 32) -> Delta:
+        pick = rng.choice(rows.size, size=k, replace=False)
+        return Delta(rows[pick], A.col_idxs[pick].astype(np.int64),
+                     rng.standard_normal(k).astype(np.float32))
+
+    def _plan(M: CSR, store: PreparedStore):
+        return plan("spmv", (M,), backend="jnp", store=store,
+                    block_size=BS)
+
+    # mutate -> plan: value delta in place, store entry rekeyed, warm plan
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=4)
+    _plan(A, store).execute(x)
+    t0 = trace_count()
+
+    def _mutate_step():
+        mm.apply_delta(_delta())
+        _plan(A, store)
+
+    mutate_us = time_call(_mutate_step, repeats=STREAM_STEPS, warmup=3)
+    y = np.asarray(_plan(A, store).execute(x))      # still correct, warm
+    err = float(np.max(np.abs(y - np.asarray(A.to_dense()) @ x)))
+    mutate_derived = (f"steps={STREAM_STEPS};"
+                      f"rekeys={store.mutation_rekeys};"
+                      f"retraces={trace_count() - t0};maxerr={err:.1e}")
+
+    # full rebuild: same value churn, but every plan pays host prep of a
+    # fresh container (cold store, warm jit) — the path apply_delta replaces
+    B = _spd_matrix(rng, n, density=0.02)
+    _plan(B, PreparedStore()).execute(x)
+
+    def _rebuild_step():
+        pick = rng.choice(B.nnz_vals.size, size=32, replace=False)
+        B.nnz_vals[pick] = rng.standard_normal(32).astype(np.float32)
+        _plan(B, PreparedStore())               # cold: full host prep
+
+    rebuild_us = time_call(_rebuild_step, repeats=STREAM_STEPS, warmup=3)
+    speedup = rebuild_us / max(mutate_us, 1e-9)
+    return [
+        ("dynamic_stream_mutate", mutate_us,
+         mutate_derived + f";speedup_vs_rebuild={speedup:.1f}x"),
+        ("dynamic_stream_rebuild", rebuild_us, f"steps={STREAM_STEPS}"),
+    ]
+
+
+def run() -> List[Row]:
+    rng = np.random.default_rng(SEED)
+    out = [_cg_row(rng), _pagerank_row(rng)]
+    out.extend(_stream_rows(rng))
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -19,7 +19,7 @@ from . import (bench_synthetic_categories, bench_thread_imbalance,
                bench_tree_mape, bench_stall_proxies, bench_importances,
                bench_perf_by_category, bench_kernel_hillclimb,
                bench_kernels_micro, bench_roofline, bench_selector,
-               bench_serving, bench_sharded)
+               bench_serving, bench_sharded, bench_dynamic)
 
 MODULES = [
     ("table2_fig3", bench_synthetic_categories),
@@ -34,6 +34,7 @@ MODULES = [
     ("selector", bench_selector),
     ("serving", bench_serving),
     ("sharded", bench_sharded),
+    ("dynamic", bench_dynamic),
 ]
 
 

@@ -113,6 +113,61 @@ print(f"trace smoke OK: {len(evs)} events "
       + "  ".join(f"{k}={v}" for k, v in sorted(counts.items())))
 PY
 
+# mutation-chaos smoke (DESIGN.md §14): a churn loop — value deltas plus
+# structural-insert pressure against a warm PreparedStore — under a 20%
+# deterministic fault rate on the two mutation sites (delta-apply,
+# slack-overflow). Machine-checked: every injected fault is recovered
+# (fired == recovered), at least one epoch-swap rebuild engaged (the
+# slack=1 container cannot absorb the insert stream), and every
+# post-mutation result still matches the dense reference through the warm
+# store — degradation never serves a stale or wrong answer.
+python - <<'PY'
+import numpy as np
+from repro.core import CSR
+from repro.sparse import (Delta, FaultInjector, MutableMatrix, PreparedStore,
+                          install_injector, plan, reset_resilience)
+rng = np.random.default_rng(11)
+n = 96
+d = (rng.random((n, n)) < 0.03) * rng.standard_normal((n, n))
+A = CSR.from_dense(d.astype(np.float32))
+x = rng.standard_normal(n).astype(np.float32)
+inj = FaultInjector(rate=0.2, seed=7,
+                    sites=("delta-apply", "slack-overflow"))
+install_injector(inj)
+store = PreparedStore()
+mm = MutableMatrix(A, store=store, slack=1)
+plan("spmv", (A,), backend="jnp", store=store, block_size=8).execute(x)
+dense = np.asarray(A.to_dense())
+empty = np.argwhere(~dense.reshape(n // 8, 8, n // 8, 8).any(axis=(1, 3)))
+for step in range(24):
+    if step % 3 == 2 and len(empty):
+        k = min(4, len(empty))          # insert pressure -> epoch swap
+        pos = empty[:k] * 8
+        empty = empty[k:]
+        mm.apply_delta(Delta(pos[:, 0], pos[:, 1],
+                             np.ones(k, np.float32)))
+    else:
+        lens = np.diff(A.row_ptrs)
+        rows = np.repeat(np.arange(n), lens)
+        pick = rng.choice(rows.size, size=8, replace=False)
+        mm.apply_delta(Delta(rows[pick], A.col_idxs[pick].astype(np.int64),
+                             rng.standard_normal(8).astype(np.float32)))
+    y = np.asarray(plan("spmv", (A,), backend="jnp", store=store,
+                        block_size=8).execute(x))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+t = inj.telemetry()
+mt = dict(mm.telemetry())
+assert t["fault_fired"] > 0, t
+assert t["fault_fired"] == t["fault_recovered"], t
+assert mt["epoch_swaps"] >= 1 and mt["rebuilds"] >= 1, mt
+reset_resilience()
+print(f"mutation chaos OK: {t['fault_fired']:.0f} faults fired == "
+      f"{t['fault_recovered']:.0f} recovered, "
+      f"{mt['epoch_swaps']:.0f} epoch swaps, "
+      f"{mt['rebuilds']:.0f} rebuilds, generation {mt['generation']}")
+PY
+
 # serving smoke (DESIGN.md §13): a 48-request Zipf burst through the
 # continuous-batching engine. Machine-checked: the ledger identity
 # admitted == completed + shed holds exactly, at least one drain stacked

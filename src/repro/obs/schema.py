@@ -34,9 +34,17 @@ from typing import Dict, Mapping, Tuple
 #   enqueue     a request hit the engine's bounded queue (queued or rejected)
 #   admit       a queued request passed admission into a slot
 #   drain       one engine tick drained one slot as ONE stacked launch (span)
+#
+# Dynamic-sparsity events (DESIGN.md §14) — the mutation/drift path:
+#   mutate      a MutableMatrix delta landed (generation bump + store rekey)
+#   epoch_swap  slack exhausted or fault injected: old generation kept
+#               serving while the new container was rebuilt
+#   drift       DriftMonitor scored a mutated matrix against its baseline
+#               fingerprint (quarantine/refit decisions carry the score)
 EVENT_TYPES: Tuple[str, ...] = (
     "select", "prep", "compile", "launch", "fallback", "quarantine",
     "shed", "store_evict", "enqueue", "admit", "drain",
+    "mutate", "epoch_swap", "drift",
 )
 
 # Required ``args`` fields per event type — the golden-schema contract a
@@ -54,6 +62,9 @@ EVENT_FIELDS: Dict[str, Tuple[str, ...]] = {
     "enqueue": ("name", "outcome"),
     "admit": ("name", "slot"),
     "drain": ("slot", "n_requests"),
+    "mutate": ("base", "generation"),
+    "epoch_swap": ("op", "reason"),
+    "drift": ("base", "score"),
 }
 
 # Telemetry keys are flat snake_case identifiers: lowercase alphanumerics

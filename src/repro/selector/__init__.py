@@ -9,6 +9,7 @@ Turns the offline characterization loop into a serving subsystem:
                    (service.py); CLI entry: ``python -m repro.selector.serve``
 """
 from .cache import ScheduleCache, schedule_from_dict, schedule_to_dict
+from .drift import DriftMonitor, drift_score
 from .fingerprint import (FP_PRECISION, Fingerprint, fingerprint,
                           routing_fingerprint)
 from .predictor import Prediction, SchedulePredictor, retraining_row
@@ -18,5 +19,5 @@ __all__ = [
     "FP_PRECISION", "Fingerprint", "fingerprint", "routing_fingerprint",
     "Prediction", "SchedulePredictor", "retraining_row",
     "ScheduleCache", "schedule_from_dict", "schedule_to_dict",
-    "Decision", "Request", "SelectorService",
+    "Decision", "DriftMonitor", "Request", "SelectorService", "drift_score",
 ]

@@ -63,6 +63,7 @@ class ScheduleCache:
     corrupt_files = scoped_int("corrupt_files")
     faulted_reads = scoped_int("faulted_reads")
     flush_failures = scoped_int("flush_failures")
+    drift_evictions = scoped_int("drift_evictions")
 
     def __init__(self, path: Optional[str] = None, capacity: int = 256,
                  context: str = "") -> None:
@@ -162,6 +163,16 @@ class ScheduleCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def quarantine(self, key: str) -> bool:
+        """Drop a cached schedule whose matrix has drifted away from the
+        fingerprint it was selected under (DriftMonitor, DESIGN.md §14).
+        Unlike an LRU eviction this is a correctness eviction: the entry's
+        canonical vector no longer describes the matrix it's keyed for."""
+        if self._entries.pop(key, None) is None:
+            return False
+        self.drift_evictions += 1
+        return True
+
     def telemetry(self) -> Dict[str, float]:
         lookups = self.hits + self.misses
         return ordered({
@@ -175,5 +186,6 @@ class ScheduleCache:
             "corrupt_files": float(self.corrupt_files),
             "faulted_reads": float(self.faulted_reads),
             "flush_failures": float(self.flush_failures),
+            "drift_evictions": float(self.drift_evictions),
             "hit_rate": self.hits / lookups if lookups else 0.0,
         })

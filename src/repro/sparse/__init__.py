@@ -26,9 +26,11 @@ from . import ops_builtin  # noqa: F401  (registers the built-in ops)
 from .ops_builtin import moe_tile_schedule, route_and_pad
 from .partition import (RowPartition, bounds_imbalance, partition_rows,
                         slice_rows)
+from .mutate import Delta, MutableMatrix, SlackOverflow
 from .plan import (Plan, launch_count, plan, plan_bucket, plan_sharded,
                    reset_counters, trace_count)
-from .prepared import PreparedStore, bucket_edge, content_key
+from .prepared import (PreparedStore, bucket_edge, content_key,
+                       raw_content_key, split_version_key)
 from .registry import OpSpec, get_op, list_ops, register_op
 from .resilience import (FALLBACK_CHAIN, Deadline, FaultInjector,
                          GuardedExecutor, InjectedFault, Quarantine,
@@ -39,14 +41,15 @@ from .tensor import (LAYOUT_FIELDS, ShardedMeta, ShardedSparseTensor,
                      SparseMeta, SparseTensor)
 
 __all__ = [
-    "FALLBACK_CHAIN", "Deadline", "FaultInjector", "GuardedExecutor",
-    "InjectedFault", "LAYOUT_FIELDS", "OpSpec", "Plan", "PreparedStore",
-    "Quarantine", "RowPartition", "ShardedMeta", "ShardedSparseTensor",
-    "SparseMeta", "SparseTensor", "bounds_imbalance", "bucket_edge",
-    "content_key", "default_executor", "default_quarantine", "get_op",
-    "install_injector", "launch_count", "list_ops", "moe_tile_schedule",
-    "partition_rows", "plan", "plan_bucket", "plan_sharded",
+    "Delta", "FALLBACK_CHAIN", "Deadline", "FaultInjector",
+    "GuardedExecutor", "InjectedFault", "LAYOUT_FIELDS", "MutableMatrix",
+    "OpSpec", "Plan", "PreparedStore", "Quarantine", "RowPartition",
+    "ShardedMeta", "ShardedSparseTensor", "SlackOverflow", "SparseMeta",
+    "SparseTensor", "bounds_imbalance", "bucket_edge", "content_key",
+    "default_executor", "default_quarantine", "get_op", "install_injector",
+    "launch_count", "list_ops", "moe_tile_schedule", "partition_rows",
+    "plan", "plan_bucket", "plan_sharded", "raw_content_key",
     "register_dense_ref", "register_op", "reset_counters",
-    "reset_resilience", "route_and_pad", "slice_rows", "trace_count",
-    "with_backoff",
+    "reset_resilience", "route_and_pad", "slice_rows", "split_version_key",
+    "trace_count", "with_backoff",
 ]

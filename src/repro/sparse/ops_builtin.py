@@ -151,7 +151,8 @@ def _plan_matvec(operands, schedule: Optional[Schedule], backend: str, *,
             max_blocks, bool(shape_bucket))
         st = _cached(store, key, lambda: SparseTensor.from_csr(
             a, schedule=sched, layout=lay, slice_height=slice_height,
-            sigma=sigma, max_blocks=max_blocks, shape_bucket=shape_bucket))
+            sigma=sigma, max_blocks=max_blocks, shape_bucket=shape_bucket,
+            slack=getattr(a, "mutation_slack", 0)))
     else:
         st = SparseTensor.wrap(a, schedule)
     if st.layout not in MATVEC_LAYOUTS:
@@ -306,7 +307,8 @@ def _member_tensors(members: List, schedule: Schedule, sigma: int,
                 bool(shape_bucket))
         sts.append(_cached(store, skey, lambda m=m: SparseTensor.from_csr(
             m, schedule=schedule, sigma=sigma,
-            shape_bucket=bool(shape_bucket))))
+            shape_bucket=bool(shape_bucket),
+            slack=getattr(m, "mutation_slack", 0))))
     if len({st.layout for st in sts}) != 1:
         return None
     return sts

@@ -42,8 +42,10 @@ from .resilience import (InjectedFault, atomic_write_json, checksum_entries,
                          fault_fired, load_json_guarded, note_recovery,
                          verify_entries)
 
-# v2: per-entry crc32 checksums + guarded (skip-and-count) load
-STORE_INDEX_VERSION = 2
+# v3: per-entry generation counters (dynamic-sparsity reload safety,
+# DESIGN.md §14); v2 added per-entry crc32 checksums + guarded load.
+# Older index versions cold-start empty (the version check below).
+STORE_INDEX_VERSION = 3
 
 # Default device-byte budget of a store: enough for serving working sets,
 # small enough that an unbounded stream of distinct matrices cannot pin
@@ -77,7 +79,16 @@ def content_key(csr: CSR) -> str:
     containers differ — structure or values — so it hashes the raw CSR
     arrays. O(nnz) but a single sha1 pass, orders of magnitude below the
     container build it lets a warm hit skip.
+
+    Versioned mutable operands (``repro.sparse.mutate``, DESIGN.md §14)
+    carry a ``version_key`` attribute of the form ``<base sha1>@g<gen>``:
+    the identity is then ``(base_key, generation)`` — O(1) instead of a
+    re-hash per lookup, and a mutated matrix can never alias its own
+    pre-mutation cache entries because every delta bumps the generation.
     """
+    vk = getattr(csr, "version_key", None)
+    if vk is not None:
+        return str(vk)
     h = hashlib.sha1()
     h.update(f"csr;{csr.shape[0]}x{csr.shape[1]};{csr.nnz};".encode())
     for arr in (csr.row_ptrs, csr.col_idxs, csr.nnz_vals):
@@ -85,6 +96,30 @@ def content_key(csr: CSR) -> str:
         h.update(str(a.dtype).encode())
         h.update(a.tobytes())
     return h.hexdigest()
+
+
+def raw_content_key(csr: CSR) -> str:
+    """The exact-bytes sha1, ignoring any ``version_key`` — the *base* half
+    of a versioned ``(base_key, generation)`` identity, computed once when a
+    matrix is wrapped for mutation."""
+    vk = getattr(csr, "version_key", None)
+    if vk is None:
+        return content_key(csr)
+    try:
+        delattr(csr, "version_key")
+        return content_key(csr)
+    finally:
+        csr.version_key = vk
+
+
+def split_version_key(token: str) -> Tuple[str, int]:
+    """``(base, generation)`` of a content-key token: ``"<base>@g<N>"``
+    splits, an unversioned key is generation 0 of itself."""
+    if "@g" in token:
+        base, _, gen = token.rpartition("@g")
+        if gen.isdigit():
+            return base, int(gen)
+    return token, 0
 
 
 def array_key(arr: np.ndarray) -> str:
@@ -111,6 +146,26 @@ def _leaves_alive(value: Any) -> bool:
         if is_deleted is not None and is_deleted():
             return False
     return True
+
+
+def _key_version(key: Tuple) -> Dict:
+    """``{"base": ..., "generation": ...}`` of a store key: the newest
+    versioned content-key token found anywhere in the (nested) tuple, or
+    generation 0 of the empty base when the key is unversioned."""
+    base, gen = "", 0
+
+    def _walk(t: Tuple) -> None:
+        nonlocal base, gen
+        for el in t:
+            if isinstance(el, tuple):
+                _walk(el)
+            elif isinstance(el, str) and "@g" in el:
+                b, g = split_version_key(el)
+                if b != el and g >= gen:
+                    base, gen = b, g
+
+    _walk(key)
+    return {"base": base, "generation": gen}
 
 
 class PreparedStore:
@@ -144,6 +199,9 @@ class PreparedStore:
     fault_evictions = scoped_int("fault_evictions")
     save_failures = scoped_int("save_failures")
     corrupt_loads = scoped_int("corrupt_loads")
+    mutation_rekeys = scoped_int("mutation_rekeys")
+    mutation_invalidated = scoped_int("mutation_invalidated")
+    stale_drops = scoped_int("stale_drops")
 
     def __init__(self, byte_budget: int = DEFAULT_BYTE_BUDGET) -> None:
         self._metrics = default_registry().scope("prepared_store")
@@ -229,6 +287,51 @@ class PreparedStore:
 
         return any(_walk(k) for k in self._entries)
 
+    def pop_matching(self, content_keys) -> list:
+        """Remove and return every ``(key, value)`` whose key tuple
+        references any of ``content_keys`` — the sub-matrix-granularity
+        invalidation primitive of the mutation path (DESIGN.md §14).
+
+        ``repro.sparse.mutate`` calls this with a mutated operand's old
+        version key: single-container entries get the delta applied in
+        place and are re-inserted under the new generation (counted
+        ``mutation_rekeys`` by the caller via ``note_rekeyed``); derived
+        products embedding copied values — stacked buckets, spgemm/spadd
+        staged products, row partitions — are dropped for lazy rebuild
+        (``mutation_invalidated``). Entries for *other* matrices are never
+        touched: siblings stay resident.
+        """
+        cks = set(content_keys)
+
+        def _refs(t: Tuple) -> bool:
+            for el in t:
+                if isinstance(el, tuple):
+                    if _refs(el):
+                        return True
+                elif el in cks:
+                    return True
+            return False
+
+        matched = [k for k in self._entries if _refs(k)]
+        out = []
+        for k in matched:
+            value, nb = self._entries.pop(k)
+            self.bytes_in_use -= nb
+            out.append((k, value))
+        return out
+
+    @staticmethod
+    def rewrite_key(key: Tuple, old_ck: str, new_ck: str) -> Tuple:
+        """The same key tuple with every occurrence of ``old_ck`` replaced
+        by ``new_ck`` (nested tuples included) — how a rekeyed entry moves
+        to the next generation without re-deriving its prep kwargs."""
+
+        def _rw(t):
+            return tuple(_rw(el) if isinstance(el, tuple)
+                         else (new_ck if el == old_ck else el) for el in t)
+
+        return _rw(key)
+
     def get_or_build(self, key: Optional[Tuple],
                      builder: Callable[[], Any]) -> Any:
         """Cached value for ``key``, building (and inserting) on a miss.
@@ -267,7 +370,8 @@ class PreparedStore:
             "version": STORE_INDEX_VERSION,
             "telemetry": self.telemetry(),
             "entries": checksum_entries(
-                [{"key": repr(k), "nbytes": nb}
+                [dict({"key": repr(k), "nbytes": nb},
+                      **_key_version(k))
                  for k, (_, nb) in self._entries.items()]),
         }
         try:
@@ -301,6 +405,25 @@ class PreparedStore:
         raw = payload.get("entries", [])
         entries, corrupt = verify_entries(raw if isinstance(raw, list) else [])
         self.corrupt_loads += corrupt
+        # Dynamic-sparsity reload safety (DESIGN.md §14): an index written
+        # mid-mutation can list several generations of one base matrix.
+        # Only the newest generation per base survives the reload — a
+        # pre-mutation entry must never be reported (or re-warmed) as if
+        # it were current.
+        newest: Dict[str, int] = {}
+        for e in entries:
+            base = e.get("base", "")
+            if base:
+                gen = int(e.get("generation", 0))
+                newest[base] = max(newest.get(base, 0), gen)
+        kept = []
+        for e in entries:
+            base = e.get("base", "")
+            if base and int(e.get("generation", 0)) < newest[base]:
+                self.stale_drops += 1
+            else:
+                kept.append(e)
+        entries = kept
         tel = payload.get("telemetry", {})
         self.prior = {"telemetry": tel if isinstance(tel, dict) else {},
                       "entries": entries}
@@ -321,6 +444,9 @@ class PreparedStore:
             "fault_evictions": float(self.fault_evictions),
             "save_failures": float(self.save_failures),
             "corrupt_loads": float(self.corrupt_loads),
+            "mutation_rekeys": float(self.mutation_rekeys),
+            "mutation_invalidated": float(self.mutation_invalidated),
+            "stale_drops": float(self.stale_drops),
             "hit_rate": self.hits / lookups if lookups else 0.0,
             # eviction pressure (DESIGN.md §13): fraction of inserts the
             # LRU had to pay for by dropping a colder entry — ~0 while the

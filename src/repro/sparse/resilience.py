@@ -57,9 +57,13 @@ from ..obs import trace as obs_trace
 # resort (registered via register_dense_ref), not a Schedule backend.
 FALLBACK_CHAIN = ("pallas", "interpret", "jnp", "dense")
 
-# Named injection sites a FaultInjector can fire at.
+# Named injection sites a FaultInjector can fire at. The two mutation
+# sites (DESIGN.md §14): ``delta-apply`` fires inside the value-only device
+# fast path (recovery = the epoch-swap rebuild), ``slack-overflow``
+# simulates an exhausted slack reservation (recovery = same swap), so the
+# chaos gate's ``fired == recovered`` identity covers dynamic sparsity.
 SITES = ("prep", "launch", "cache-read", "cache-write", "store-evict",
-         "shard-dispatch")
+         "shard-dispatch", "delta-apply", "slack-overflow")
 
 
 class InjectedFault(RuntimeError):

@@ -71,6 +71,21 @@ class SparseTensor:
         # padded shape in ``meta`` (so equal buckets share a jit key) and
         # the true shape here, outside the pytree, for output slicing.
         self.true_shape = meta.shape
+        # Mutation state (DESIGN.md §14), all outside the pytree: the
+        # generation counter bumps on every applied delta (leaf shapes and
+        # meta stay identical, so jit never retraces a value update);
+        # ``spare_blocks`` is the reserved pool of all-zero block slots a
+        # structural insert can claim (``from_csr(..., slack=)`` fills it);
+        # ``_mut`` holds the lazily built host bookkeeping of the delta
+        # path (block map, free-slot cursors).
+        self.generation = 0
+        self.spare_blocks: list = []
+        self._mut: Optional[dict] = None
+        # Index of the shared all-zeros pad block. Bucket padding appends
+        # blocks AFTER it (indices keep pointing at the pre-pad position),
+        # so ``from_csr`` records it pre-pad; ``blocks.shape[0] - 1`` is
+        # only correct for unbucketed containers.
+        self._zero_idx: Optional[int] = None
 
     # -------------------------------------------------------------- pytree
     def tree_flatten(self):
@@ -138,7 +153,8 @@ class SparseTensor:
                  block_size: int = 128, layout: Optional[str] = None,
                  slice_height: int = 8, sigma: int = SELL_SIGMA,
                  max_blocks: Optional[int] = None,
-                 shape_bucket: bool = False) -> "SparseTensor":
+                 shape_bucket: bool = False,
+                 slack: int = 0) -> "SparseTensor":
         """Prepare ``csr`` under ``schedule`` (or the keyword defaults).
 
         ``layout="bsr"`` forces the raw blocked container regardless of the
@@ -149,15 +165,30 @@ class SparseTensor:
         of nearby sizes share one jit cache key; the returned tensor's
         ``meta.shape`` is the padded shape and ``true_shape`` the logical
         one (executors slice outputs back outside the traced program).
+
+        ``slack > 0`` reserves mutation headroom in ELL/SELL containers
+        (DESIGN.md §14): ``slack`` extra block slots per block-row (ELL) /
+        per slice row (SELL) plus a pool of spare all-zero blocks, so
+        ``apply_delta`` can absorb structural inserts without a rebuild.
+        ``MutableMatrix`` sets ``csr.mutation_slack`` and every planner's
+        prep path forwards it here automatically.
         """
         if schedule is None:
             schedule = cls.default_schedule(block_size, layout, slice_height)
         container = cls.build_container(csr, schedule, layout=layout,
                                         sigma=sigma, max_blocks=max_blocks)
+        spare: list = []
+        if slack > 0 and isinstance(container, (ELLBSR, SELLBSR)):
+            from .mutate import reserve_slack
+            container, spare = reserve_slack(container, int(slack))
+        zero_idx = (int(container.blocks.shape[0]) - 1
+                    if isinstance(container, (ELLBSR, SELLBSR)) else None)
         if shape_bucket and not isinstance(container, BSR):
             container = pad_container_to_bucket(container)
         st = cls.from_layout(container, schedule=schedule)
         st.true_shape = (int(csr.shape[0]), int(csr.shape[1]))
+        st.spare_blocks = spare
+        st._zero_idx = zero_idx
         return st
 
     @classmethod
@@ -226,6 +257,21 @@ class SparseTensor:
         if isinstance(obj, CSR):
             return cls.from_csr(obj, schedule=schedule)
         return cls.from_layout(obj, schedule=schedule)
+
+    # ----------------------------------------------------------- mutation
+    def apply_delta(self, delta) -> "SparseTensor":
+        """Apply a ``repro.sparse.mutate.Delta`` to this prepared container
+        in place (DESIGN.md §14).
+
+        Value updates rebind the device leaves to same-shape scatters — no
+        host re-prep, and no retrace because the pytree structure and every
+        aval are unchanged. Structural inserts claim reserved slack
+        (``from_csr(..., slack=)``); when the slack is exhausted the call
+        raises ``SlackOverflow`` and the caller (``MutableMatrix``) performs
+        an epoch-swap rebuild instead. Bumps ``self.generation``.
+        """
+        from .mutate import apply_delta_to_tensor
+        return apply_delta_to_tensor(self, delta)
 
     # ---------------------------------------------------------- host side
     def to_host(self) -> HostLayout:

@@ -1,0 +1,481 @@
+"""Dynamic sparsity under churn (DESIGN.md §14): versioned mutable tensors,
+sub-matrix store invalidation, epoch swap, drift watchdog, chaos coverage.
+
+The acceptance criteria this file machine-checks:
+* value-only ``apply_delta`` leaves a warm ``plan()`` with zero host
+  re-prep (``store.misses`` unchanged) and zero retraces
+  (``trace_count`` unchanged), while the result tracks the mutated matrix;
+* mutation invalidates exactly the entries referencing the mutated
+  operand; sibling operands stay resident;
+* slack exhaustion degrades to an epoch swap, never a failure;
+* the drift watchdog quarantines the stale schedule-cache entry and
+  auto-refits on a drifting matrix, with post-refit accuracy recovering;
+* ``fired == recovered`` holds with the delta-apply / slack-overflow
+  fault sites enabled;
+* the v3 store index persists per-entry generations and drops stale
+  generations on reload; older index versions cold-start empty;
+* mutating a tenant's matrix mid-replay leaves no stale result and keeps
+  the engine ledger identity ``admitted == completed + shed``.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CSR, ScheduleTuner, TPU_V5E, corpus
+from repro.core.autotune import _modeled_time
+from repro.selector import (DriftMonitor, ScheduleCache, SelectorService,
+                            fingerprint)
+from repro.sparse import (Delta, FaultInjector, MutableMatrix, PreparedStore,
+                          SlackOverflow, SparseTensor, content_key,
+                          install_injector, plan, raw_content_key,
+                          reset_counters, reset_resilience,
+                          split_version_key, trace_count)
+from repro.sparse.prepared import STORE_INDEX_VERSION
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience():
+    reset_resilience()
+    yield
+    reset_resilience()
+
+
+def _random_csr(rng, n=96, density=0.06):
+    d = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    return CSR.from_dense(d.astype(np.float32))
+
+
+def _existing_positions(A, rng, k):
+    lens = np.diff(A.row_ptrs)
+    rows = np.repeat(np.arange(A.shape[0]), lens)
+    pick = rng.choice(rows.size, size=min(k, rows.size), replace=False)
+    return rows[pick], A.col_idxs[pick].astype(np.int64)
+
+
+def _empty_block_positions(A, bs, k):
+    """One position in each of up to ``k`` fully empty blocks."""
+    d = np.asarray(A.to_dense())
+    n = d.shape[0]
+    out = []
+    for r in range(0, n, bs):
+        for c in range(0, n, bs):
+            if not d[r:r + bs, c:c + bs].any():
+                out.append((r, c))
+            if len(out) == k:
+                return np.array(out)
+    return np.array(out) if out else np.empty((0, 2), np.int64)
+
+
+# ------------------------------------------------------ versioned content keys
+
+def test_version_key_rides_on_content_key():
+    rng = np.random.default_rng(0)
+    A = _random_csr(rng)
+    base = content_key(A)
+    mm = MutableMatrix(A, slack=2)
+    assert content_key(A) == f"{base}@g0"
+    assert raw_content_key(A) == base
+    mm.set_values(*_existing_positions(A, rng, 2),
+                  np.ones(2, np.float32))
+    assert content_key(A) == f"{base}@g1"
+    assert split_version_key(content_key(A)) == (base, 1)
+    assert split_version_key(base) == (base, 0)
+
+
+# ------------------------------------------- warm-plan fast path (machine check)
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_value_delta_skips_host_prep_and_retrace(layout):
+    rng = np.random.default_rng(1)
+    A = _random_csr(rng)
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=4)
+    reset_counters()
+    p = plan("spmv", (A,), backend="jnp", layout=layout, store=store,
+             block_size=16)
+    y0 = np.asarray(p.execute(x))
+    np.testing.assert_allclose(y0, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    traces0, misses0 = trace_count(), store.misses
+
+    r, c = _existing_positions(A, rng, 8)
+    mm.apply_delta(Delta(r, c, rng.standard_normal(8).astype(np.float32)))
+
+    p2 = plan("spmv", (A,), backend="jnp", layout=layout, store=store,
+              block_size=16)
+    y1 = np.asarray(p2.execute(x))
+    np.testing.assert_allclose(y1, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    assert not np.allclose(y1, y0), "delta must change the result"
+    # THE machine check: no retrace, no host re-prep after a value delta
+    assert trace_count() == traces0
+    assert store.misses == misses0
+    assert store.mutation_rekeys >= 1
+
+
+@pytest.mark.parametrize("layout", ["ell", "sell"])
+def test_structural_insert_within_slack_stays_warm(layout):
+    rng = np.random.default_rng(2)
+    A = _random_csr(rng, density=0.03)
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=4)
+    plan("spmv", (A,), backend="jnp", layout=layout, store=store,
+         block_size=8).execute(x)
+    reset_counters()
+    traces0, misses0 = trace_count(), store.misses
+
+    pos = _empty_block_positions(A, 8, 2)
+    assert len(pos), "need empty blocks for a structural insert"
+    mm.apply_delta(Delta(pos[:, 0], pos[:, 1],
+                         np.full(len(pos), 3.0, np.float32)))
+
+    y = np.asarray(plan("spmv", (A,), backend="jnp", layout=layout,
+                        store=store, block_size=8).execute(x))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    assert trace_count() == traces0 and store.misses == misses0
+    assert dict(mm.telemetry())["structural_inserts"] >= 1
+    assert dict(mm.telemetry())["epoch_swaps"] == 0
+
+
+# ---------------------------------------------------------------- epoch swap
+
+def test_slack_exhaustion_epoch_swaps_never_fails():
+    rng = np.random.default_rng(3)
+    A = _random_csr(rng, n=64, density=0.03)
+    x = rng.standard_normal(64).astype(np.float32)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=1)    # pool of 4 spare blocks
+    plan("spmv", (A,), backend="jnp", store=store, block_size=8).execute(x)
+    pos = _empty_block_positions(A, 8, 10)         # 10 new blocks >> slack
+    mm.apply_delta(Delta(pos[:, 0], pos[:, 1],
+                         np.ones(len(pos), np.float32)))
+    y = np.asarray(plan("spmv", (A,), backend="jnp", store=store,
+                        block_size=8).execute(x))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    tel = dict(mm.telemetry())
+    assert tel["epoch_swaps"] >= 1 and tel["rebuilds"] >= 1
+
+
+def test_bsr_tensor_rejects_structural_insert():
+    rng = np.random.default_rng(4)
+    A = _random_csr(rng, n=32, density=0.05)
+    st = SparseTensor.from_csr(A, layout="bsr", block_size=8)
+    pos = _empty_block_positions(A, 8, 1)
+    with pytest.raises(SlackOverflow):
+        st.apply_delta(Delta(pos[:, 0], pos[:, 1],
+                             np.ones(len(pos), np.float32)))
+
+
+# --------------------------------------------- sub-matrix store invalidation
+
+def test_mutation_invalidates_products_leaves_siblings_resident():
+    rng = np.random.default_rng(5)
+    A = _random_csr(rng, n=64, density=0.05)
+    B = _random_csr(rng, n=64, density=0.05)
+    C = _random_csr(rng, n=64, density=0.05)      # the sibling
+    x = rng.standard_normal(64).astype(np.float32)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=2)
+    plan("spgemm", (A, B), backend="jnp", store=store,
+         block_size=8).execute()
+    plan("spmv", (C,), backend="jnp", store=store, block_size=8).execute(x)
+    ck_c = content_key(C)
+    n_entries = len(store._entries)
+    assert store.resident(content_key(A))
+    assert store.resident(ck_c)
+
+    r, c = _existing_positions(A, rng, 2)
+    mm.apply_delta(Delta(r, c, np.ones(2, np.float32)))
+
+    # the spgemm product referencing the mutated operand is gone ...
+    old_ck = f"{mm.base_key}@g0"
+    assert not any(PreparedStore.rewrite_key(k, old_ck, "X") != k
+                   for k in store._entries), "no old-generation keys remain"
+    assert store.mutation_invalidated >= 1
+    # ... while the sibling's entries were never touched
+    assert store.resident(ck_c)
+    assert len(store._entries) < n_entries
+    # and the product rebuilds correctly against the new values
+    got = plan("spgemm", (A, B), backend="jnp", store=store,
+               block_size=8).execute()
+    want = np.asarray(A.to_dense()) @ np.asarray(B.to_dense())
+    np.testing.assert_allclose(np.asarray(got.to_dense()), want,
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------- hypothesis property
+
+try:
+    from hypothesis import given, settings, strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:       # deterministic fallback below still runs the property
+    HAVE_HYPOTHESIS = False
+
+
+def _check_apply_delta_matches_rebuild(seed, layout, structural, mode):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(24, 72))
+    d = ((rng.random((n, n)) < 0.08) *
+         rng.standard_normal((n, n))).astype(np.float32)
+    A = CSR.from_dense(d)
+    bs = 8
+    st = SparseTensor.from_csr(A, layout=None if layout == "ell" else layout,
+                               block_size=bs, slack=2, shape_bucket=True)
+    # build the delta: values on existing positions, optionally one
+    # structural insert into an empty block (ell/sell only)
+    k = int(rng.integers(1, 6))
+    lens = np.diff(A.row_ptrs)
+    rows = np.repeat(np.arange(n), lens)
+    if rows.size == 0:
+        return
+    pick = rng.choice(rows.size, size=min(k, rows.size), replace=False)
+    dr = list(rows[pick])
+    dc = list(A.col_idxs[pick].astype(np.int64))
+    if structural and layout != "bsr":
+        pos = _empty_block_positions(A, bs, 1)
+        if len(pos):
+            dr.append(pos[0, 0])
+            dc.append(pos[0, 1])
+    dv = rng.standard_normal(len(dr)).astype(np.float32)
+    delta = Delta(np.array(dr), np.array(dc), dv, mode)
+
+    # ground truth: apply the same delta to the dense form and rebuild
+    want = d.copy()
+    if mode == "add":
+        np.add.at(want, (np.array(dr), np.array(dc)), dv)
+    else:
+        want[np.array(dr), np.array(dc)] = dv
+    st.apply_delta(delta)
+    rebuilt = SparseTensor.from_csr(
+        CSR.from_dense(want), layout=None if layout == "ell" else layout,
+        block_size=bs, shape_bucket=True)
+    np.testing.assert_allclose(_tensor_dense(st, n),
+                               _tensor_dense(rebuilt, n),
+                               rtol=1e-5, atol=1e-5)
+    assert st.generation == 1
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st_.integers(0, 2**16),
+           layout=st_.sampled_from(["ell", "sell", "bsr"]),
+           structural=st_.booleans(), mode=st_.sampled_from(["set", "add"]))
+    @settings(max_examples=20, deadline=None)
+    def test_apply_delta_matches_rebuild(seed, layout, structural, mode):
+        _check_apply_delta_matches_rebuild(seed, layout, structural, mode)
+else:
+    @pytest.mark.parametrize("mode", ["set", "add"])
+    @pytest.mark.parametrize("structural", [False, True])
+    @pytest.mark.parametrize("layout", ["ell", "sell", "bsr"])
+    @pytest.mark.parametrize("seed", [0, 11, 42])
+    def test_apply_delta_matches_rebuild(seed, layout, structural, mode):
+        _check_apply_delta_matches_rebuild(seed, layout, structural, mode)
+
+
+def _tensor_dense(st, n):
+    """Densify a prepared container through its host form. Iterates every
+    slot/cell: padding and unused slack reference all-zero blocks, so they
+    contribute nothing; the generous allocation absorbs bucket padding."""
+    host = st.to_host()
+    if isinstance(host, np.ndarray):
+        return np.asarray(host)[:n, :n]
+    bs = st.meta.block_size
+    if st.layout == "ell":
+        bi, bc, blocks = (host.block_indices, host.block_cols, host.blocks)
+        nr, nc = bi.shape[0] * bs, (int(bc.max(initial=0)) + 1) * bs
+        out = np.zeros((max(nr, n), max(nc, n)), np.float32)
+        for br in range(bi.shape[0]):
+            for s in range(bi.shape[1]):
+                c = int(bc[br, s])
+                out[br * bs:(br + 1) * bs, c * bs:(c + 1) * bs] \
+                    += blocks[int(bi[br, s])]
+    elif st.layout == "sell":
+        n_br = host.n_block_rows
+        nr = n_br * bs
+        nc = (int(host.cell_col.max(initial=0)) + 1) * bs
+        out = np.zeros((max(nr, n), max(nc, n)), np.float32)
+        for t in range(host.cell_block.shape[0]):
+            p = int(host.cell_row[t])
+            if p >= n_br:
+                continue
+            br = int(host.row_perm[p])
+            c = int(host.cell_col[t])
+            out[br * bs:(br + 1) * bs, c * bs:(c + 1) * bs] \
+                += host.blocks[int(host.cell_block[t])]
+    else:   # bsr
+        nr = host.n_block_rows * bs
+        nc = (int(host.block_cols.max(initial=0)) + 1) * bs
+        out = np.zeros((max(nr, n), max(nc, n)), np.float32)
+        for br in range(host.n_block_rows):
+            for j in range(int(host.block_ptrs[br]),
+                           int(host.block_ptrs[br + 1])):
+                c = int(host.block_cols[j])
+                out[br * bs:(br + 1) * bs, c * bs:(c + 1) * bs] \
+                    += host.blocks[j]
+    return out[:n, :n]
+
+
+# ------------------------------------------------------------- chaos coverage
+
+@pytest.mark.parametrize("site", ["delta-apply", "slack-overflow"])
+def test_mutation_chaos_fired_equals_recovered(site):
+    rng = np.random.default_rng(6)
+    A = _random_csr(rng, n=64, density=0.05)
+    x = rng.standard_normal(64).astype(np.float32)
+    inj = FaultInjector(rate=1.0, seed=7, sites=(site,))
+    install_injector(inj)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=4)
+    plan("spmv", (A,), backend="jnp", store=store, block_size=8).execute(x)
+    r, c = _existing_positions(A, rng, 4)
+    mm.apply_delta(Delta(r, c, np.full(4, 2.0, np.float32)))
+    y = np.asarray(plan("spmv", (A,), backend="jnp", store=store,
+                        block_size=8).execute(x))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    t = inj.telemetry()
+    assert t["fault_fired"] == t["fault_recovered"] > 0
+    assert dict(mm.telemetry())["epoch_swaps"] >= 1
+
+
+# ----------------------------------------------------------- drift watchdog
+
+def test_drift_quarantines_stale_schedule_and_auto_refits():
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(
+        corpus(n_matrices=6, n_min=128, n_max=192, seed=3), max_mats=3)
+    svc = SelectorService(tuner, cache=ScheduleCache())
+    mon = DriftMonitor(svc, drift_threshold=0.05, accuracy_floor=0.9,
+                       window=6, min_checks=2)
+    rng = np.random.default_rng(5)
+    n = 128
+    A = _random_csr(rng, n=n, density=0.02)
+    mm = MutableMatrix(A, store=PreparedStore(), monitor=mon, slack=8)
+    svc.select(A)
+    base_fp = mon._baselines[mm.base_key]
+    assert base_fp.key in svc.cache._entries   # schedule cached pre-drift
+
+    def tree_near_optimal():
+        fp = fingerprint(A)
+        pred = svc.predictor.predict_from_features(fp.features)
+        t_best = min(_modeled_time(tuner.kernel, A, tuner.platform, s)
+                     for _, s in svc.predictor.rank(fp.features))
+        t_pred = _modeled_time(tuner.kernel, A, tuner.platform,
+                               pred.schedule)
+        return t_pred <= t_best * 1.05
+
+    pre = []
+    for _ in range(10):     # drift hard toward dense, 1200 inserts a step
+        empt = np.argwhere(np.asarray(A.to_dense()) == 0)
+        k = min(1200, empt.shape[0])
+        pick = empt[rng.choice(empt.shape[0], k, replace=False)]
+        if mon.auto_refits == 0:
+            pre.append(tree_near_optimal())
+        mm.apply_delta(Delta(pick[:, 0], pick[:, 1],
+                             rng.standard_normal(k).astype(np.float32)))
+    tel = dict(mon.telemetry())
+    assert tel["drift_detections"] >= 1
+    assert tel["quarantined_schedules"] >= 1
+    assert base_fp.key not in svc.cache._entries   # stale entry evicted
+    assert svc.cache.drift_evictions >= 1
+    assert tel["auto_refits"] >= 1
+    # post-refit selector accuracy recovers on the drifted distribution
+    assert tree_near_optimal()
+    assert np.mean(pre) < 1.0 or not pre   # it was degraded before refit
+
+
+# ------------------------------------------- store index generation (v3)
+
+def test_store_index_persists_generations_and_drops_stale(tmp_path):
+    rng = np.random.default_rng(7)
+    A = _random_csr(rng, n=64)
+    x = rng.standard_normal(64).astype(np.float32)
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=2)
+    plan("spmv", (A,), backend="jnp", store=store, block_size=16).execute(x)
+    path = str(tmp_path / "index.json")
+    assert store.save(path)
+    payload = json.loads(open(path).read())
+    assert payload["version"] == STORE_INDEX_VERSION == 3
+    gens = [(e["base"], e["generation"]) for e in payload["entries"]]
+    assert (mm.base_key, 0) in gens
+
+    # hand-craft a stale twin: same base at generation 0 next to gen 1
+    r, c = _existing_positions(A, rng, 2)
+    mm.apply_delta(Delta(r, c, np.ones(2, np.float32)))
+    plan("spmv", (A,), backend="jnp", store=store, block_size=16).execute(x)
+    assert store.save(path)
+    stale = dict(payload["entries"][0])      # a pre-mutation (gen 0) entry
+    cur = json.loads(open(path).read())
+    cur["entries"].append(stale)
+    from repro.sparse.resilience import atomic_write_json, checksum_entries
+    cur["entries"] = checksum_entries(
+        [{k: v for k, v in e.items() if k != "crc32"}
+         for e in cur["entries"]])
+    atomic_write_json(path, cur)
+
+    fresh = PreparedStore()
+    prior = fresh.load(path)
+    assert fresh.stale_drops >= 1
+    kept_gens = {(e["base"], e["generation"]) for e in prior["entries"]
+                 if e.get("base") == mm.base_key}
+    assert kept_gens == {(mm.base_key, 1)}   # only the newest generation
+
+
+def test_store_index_older_version_cold_starts(tmp_path):
+    path = str(tmp_path / "index.json")
+    from repro.sparse.resilience import atomic_write_json
+    atomic_write_json(path, {"version": 2, "entries": [{"key": "x"}],
+                             "telemetry": {"hits": 9}})
+    store = PreparedStore()
+    prior = store.load(path)
+    assert prior == {}                       # v2 index: cold start
+
+
+# ------------------------------------------- serving engine mid-replay mutation
+
+def test_engine_mutation_mid_replay_no_stale_result():
+    from repro.serving import ServingEngine
+
+    class FakeClock:
+        def __init__(self):
+            self.t = 100.0
+
+        def __call__(self):
+            return self.t
+
+    tuner = ScheduleTuner("spmv", TPU_V5E).fit(
+        corpus(n_matrices=6, n_min=96, n_max=160, seed=3), max_mats=3)
+    store = PreparedStore()
+    svc = SelectorService(tuner, cache=ScheduleCache(),
+                          prepared_store=store)
+    engine = ServingEngine(svc, clock=FakeClock())
+    rng = np.random.default_rng(8)
+    A = _random_csr(rng, n=96, density=0.06)
+    x = rng.standard_normal(96).astype(np.float32)
+    mm = MutableMatrix(A, store=store, slack=4)
+
+    for j in range(3):                       # warm replay
+        engine.submit(f"warm{j}", A, x, tenant=0)
+    engine.drain_all()
+
+    r, c = _existing_positions(A, rng, 6)    # mutate mid-replay
+    mm.apply_delta(Delta(r, c, rng.standard_normal(6).astype(np.float32)))
+
+    for j in range(3):                       # post-mutation replay
+        engine.submit(f"post{j}", A, x, tenant=0)
+    engine.drain_all()
+
+    # no stale result: a request through the warm store must reflect the
+    # mutated matrix, not the pre-mutation buffers
+    svc.submit("check", A, x)
+    dec = svc.run()[0]
+    np.testing.assert_allclose(np.asarray(dec.y),
+                               np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    tel = engine.telemetry()
+    assert tel["admitted"] == tel["completed"] + tel["shed"]
+    assert tel["completed"] >= 6.0
