@@ -201,6 +201,60 @@ print(f"serving smoke OK: {rep['completed']:.0f} completed / "
       f"p99 {rep['latency_p99_ms']:.0f}ms")
 PY
 
+# crash-recovery smoke (DESIGN.md §15): a seeded Zipf trace through the
+# DURABLE serve path — WAL journal + periodic checkpoints — with the crash
+# fault site armed (seed 8 fires on the very first crash check, so the
+# replay is killed mid-flight at least once and restarts under the
+# supervisor). Machine-checked: zero journaled-admitted requests lost
+# (ledger open == 0), nothing executed twice (duplicate_outcomes == 0),
+# the cross-incarnation journal ledger closes exactly over the trace, the
+# final registry holds admitted == completed + shed, and every injected
+# fault — crashes included — is recovered (fired == recovered).
+python - <<'PY'
+import json, os, tempfile
+from repro.serving.serve import main
+from repro.serving import RequestJournal, reconcile
+tmp = tempfile.mkdtemp()
+ckdir = os.path.join(tmp, "durable")
+trace_out = os.path.join(tmp, "crash_trace.json")
+rep = main(["--requests", "32", "--qps", "800", "--tenants", "4",
+            "--train-mats", "9", "--n-min", "256", "--n-max", "384",
+            "--checkpoint-dir", ckdir, "--checkpoint-every", "4",
+            "--max-restarts", "25", "--trace-out", trace_out,
+            "--fault-rate", "0.05", "--fault-seed", "8", "--seed", "17"])
+assert rep["recovery_restarts"] >= 1, rep          # a crash really happened
+assert rep["fault_fired"] == rep["fault_recovered"], rep
+assert rep["admitted"] == rep["completed"] + rep["shed"], rep
+led = reconcile(RequestJournal(os.path.join(ckdir, "journal")).scan())
+assert led["open"] == 0, led                       # no admitted request lost
+assert led["duplicate_outcomes"] == 0, led         # nothing answered twice
+assert led["submitted"] == 32.0, led               # the whole trace is WALed
+assert led["submitted"] == (led["completed"] + led["shed"]
+                            + led["rejected"]), led
+# the journal's distinct-rid view is a superset of the final incarnation's
+# registry: work a crashed incarnation finished after its last checkpoint
+# is terminal in the WAL and deduped (not re-counted) after restore
+assert led["completed"] >= rep["completed"], (led, rep)
+# trace-vs-registry reconciliation: the recorded restart / recovery /
+# checkpoint events must match the recovery telemetry exactly — one
+# restart event per caught crash, one recovery event per incarnation
+counts = {}
+with open(os.path.splitext(trace_out)[0] + ".jsonl") as f:
+    for line in f:
+        ev = json.loads(line)
+        counts[ev["type"]] = counts.get(ev["type"], 0) + 1
+assert counts.get("restart", 0) == rep["recovery_restarts"], (counts, rep)
+assert counts.get("recovery", 0) == rep["recovery_restarts"] + 1, counts
+assert counts.get("checkpoint", 0) >= 1, counts
+print(f"crash smoke OK: {rep['recovery_restarts']:.0f} restarts, "
+      f"{rep['recovery_replayed']:.0f} replayed, mttr "
+      f"{rep['recovery_mttr_ms']:.0f}ms, ledger open {led['open']:.0f}, "
+      f"dup {led['duplicate_outcomes']:.0f}, "
+      f"events restart={counts.get('restart', 0)} "
+      f"recovery={counts.get('recovery', 0)} "
+      f"checkpoint={counts.get('checkpoint', 0)}")
+PY
+
 # benchmark JSON trajectory emission stays machine-readable; BENCH_JSON_OUT
 # (set by CI) persists it so the workflow can upload it as an artifact
 bench_json="${BENCH_JSON_OUT:-$tmpdir/bench.json}"

@@ -41,10 +41,20 @@ from typing import Dict, Mapping, Tuple
 #               serving while the new container was rebuilt
 #   drift       DriftMonitor scored a mutated matrix against its baseline
 #               fingerprint (quarantine/refit decisions carry the score)
+#
+# Durability events (DESIGN.md §15) — the crash-recovery path:
+#   checkpoint  an EngineCheckpoint save attempt (outcome saved/failed;
+#               carries the engine tick the snapshot covers)
+#   restart     run_with_restarts caught a crash and is bringing up a new
+#               incarnation (carries the attempt index and crash reason)
+#   recovery    one incarnation finished restore+replay: how many journal
+#               records were replayed and how many artifacts were dropped
+#               as corrupt on the way
 EVENT_TYPES: Tuple[str, ...] = (
     "select", "prep", "compile", "launch", "fallback", "quarantine",
     "shed", "store_evict", "enqueue", "admit", "drain",
     "mutate", "epoch_swap", "drift",
+    "checkpoint", "restart", "recovery",
 )
 
 # Required ``args`` fields per event type — the golden-schema contract a
@@ -65,6 +75,9 @@ EVENT_FIELDS: Dict[str, Tuple[str, ...]] = {
     "mutate": ("base", "generation"),
     "epoch_swap": ("op", "reason"),
     "drift": ("base", "score"),
+    "checkpoint": ("tick", "outcome"),
+    "restart": ("attempt", "reason"),
+    "recovery": ("replayed", "dropped_corrupt"),
 }
 
 # Telemetry keys are flat snake_case identifiers: lowercase alphanumerics

@@ -163,6 +163,35 @@ class ScheduleCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    # ------------------------------------------------------ durability (§15)
+    def export_state(self) -> Dict:
+        """Checkpoint view: entries in LRU order plus the tuner context
+        they were selected under (per-entry ``context`` is re-checked on
+        every ``get``, so a context-mismatched restore serves misses, not
+        wrong schedules)."""
+        return {"context": self.context,
+                "entries": [dict(e) for e in self._entries.values()]}
+
+    def restore_state(self, state: Dict) -> int:
+        """Rebuild from :meth:`export_state` output (malformed entries are
+        skipped and counted, never raised); returns entries restored."""
+        if not isinstance(state, dict):
+            return 0
+        raw = state.get("entries", [])
+        n = 0
+        for entry in (raw if isinstance(raw, list) else []):
+            if isinstance(entry, dict) and isinstance(entry.get("key"), str) \
+                    and isinstance(entry.get("schedule"), dict):
+                self._entries[entry["key"]] = dict(entry)
+                self._entries.move_to_end(entry["key"])
+                n += 1
+            else:
+                self.corrupt_entries += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return n
+
     def quarantine(self, key: str) -> bool:
         """Drop a cached schedule whose matrix has drifted away from the
         fingerprint it was selected under (DriftMonitor, DESIGN.md §14).

@@ -148,6 +148,47 @@ class DriftMonitor:
             self.auto_refits += 1
             self._accuracy.clear()
 
+    # ------------------------------------------------------ durability (§15)
+    def export_state(self) -> Dict:
+        """Checkpoint view: baseline fingerprints (the anchor every cached
+        schedule's drift is scored against) and the rolling accuracy
+        window — losing either across a restart would blind the watchdog
+        to drift that happened before the crash."""
+        return {
+            "baselines": {
+                bk: {"key": fp.key,
+                     "canonical": [list(p) for p in fp.canonical],
+                     "features": dict(fp.features),
+                     "shape": list(fp.shape), "nnz": fp.nnz}
+                for bk, fp in self._baselines.items()},
+            "accuracy": [bool(b) for b in self._accuracy],
+        }
+
+    def restore_state(self, state: Dict) -> int:
+        """Rebuild baselines + window from :meth:`export_state` output;
+        malformed baselines are skipped, never raised. Returns baselines
+        restored."""
+        if not isinstance(state, dict):
+            return 0
+        n = 0
+        for bk, d in (state.get("baselines") or {}).items():
+            try:
+                fp = Fingerprint(
+                    key=str(d["key"]),
+                    canonical=tuple((str(a), str(b))
+                                    for a, b in d["canonical"]),
+                    features={str(k): float(v)
+                              for k, v in d["features"].items()},
+                    shape=(int(d["shape"][0]), int(d["shape"][1])),
+                    nnz=int(d["nnz"]))
+            except (KeyError, TypeError, ValueError, IndexError):
+                continue
+            self._baselines[str(bk)] = fp
+            n += 1
+        for b in (state.get("accuracy") or []):
+            self._accuracy.append(bool(b))
+        return n
+
     # ------------------------------------------------------------ telemetry
     @property
     def rolling_accuracy(self) -> float:

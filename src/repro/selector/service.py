@@ -516,6 +516,42 @@ class SelectorService:
         self._counts["exec_retries"] += 1
         self._exec_pressure = True
 
+    # ------------------------------------------------------ durability (§15)
+    def export_state(self) -> Dict:
+        """Checkpoint view of the service's learned state (DESIGN.md §15):
+        counters, the retraining buffer (rows are already JSON-shaped),
+        the fingerprint->Schedule cache, and the quarantine with TTLs in
+        ticks remaining. The PreparedStore is deliberately absent — device
+        buffers cannot be checkpointed and the store cold-rebuilds on miss
+        by design."""
+        return {
+            "counts": {k: int(v) for k, v in self._counts.items()},
+            "retraining_examples": [dict(ex)
+                                    for ex in self.retraining_examples],
+            "cache": self.cache.export_state(),
+            "quarantine": self.quarantine.export_state(),
+        }
+
+    def restore_state(self, state: Dict) -> None:
+        """Rebuild learned state from :meth:`export_state` output. Counter
+        values restore verbatim (the selector faces no cross-incarnation
+        identity; the engine adjusts its own ledger counters — see
+        ``EngineCheckpoint``); malformed components cold-start empty."""
+        if not isinstance(state, dict):
+            return
+        for k, v in (state.get("counts") or {}).items():
+            if k in self._counts:
+                try:
+                    self._counts[k] = int(v)
+                except (TypeError, ValueError):
+                    pass
+        raw = state.get("retraining_examples", [])
+        self.retraining_examples = [
+            dict(ex) for ex in (raw if isinstance(raw, list) else [])
+            if isinstance(ex, dict) and "features" in ex and "cfg" in ex]
+        self.cache.restore_state(state.get("cache") or {})
+        self.quarantine.restore_state(state.get("quarantine") or [])
+
     # ----------------------------------------------------------- retraining
     def refit(self, min_examples: int = 8) -> Dict[str, float]:
         """Refresh the tuner tree from the verify-fallback feedback buffer

@@ -13,14 +13,19 @@ measured jointly under load:
 CLI: ``python -m repro.serving.serve --requests 64 --qps 200 --execute``.
 """
 from .admission import BoundedQueue, EngineRequest
+from .checkpoint import CHECKPOINT_VERSION, EngineCheckpoint
 from .engine import ServingEngine
+from .journal import JournalScan, RequestJournal, reconcile
 from .replay import replay, report, tenant_rhs
 from .slots import Slot, SlotTable, slot_label
+from .supervisor import recover_engine, recovery_telemetry, run_with_restarts
 from .trace_gen import (TraceRequest, generate_trace, tenant_population,
                         zipf_weights)
 
 __all__ = [
-    "BoundedQueue", "EngineRequest", "ServingEngine", "Slot", "SlotTable",
-    "TraceRequest", "generate_trace", "replay", "report", "slot_label",
-    "tenant_population", "tenant_rhs", "zipf_weights",
+    "BoundedQueue", "CHECKPOINT_VERSION", "EngineCheckpoint", "EngineRequest",
+    "JournalScan", "RequestJournal", "ServingEngine", "Slot", "SlotTable",
+    "TraceRequest", "generate_trace", "reconcile", "recover_engine",
+    "recovery_telemetry", "replay", "report", "run_with_restarts",
+    "slot_label", "tenant_population", "tenant_rhs", "zipf_weights",
 ]

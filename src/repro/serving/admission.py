@@ -44,6 +44,9 @@ class EngineRequest:
     t_enqueue: float = 0.0
     deadline: Optional[Deadline] = None
     tenant: int = -1
+    # idempotency key (DESIGN.md §15): stable across incarnations, so a
+    # journal-replayed request can never drain twice
+    rid: str = ""
 
 
 class BoundedQueue:

@@ -47,6 +47,7 @@ from ..core.csr import CSR
 from ..obs import CounterDict, default_registry, ordered
 from ..obs import trace as obs_trace
 from ..selector.service import Decision, Request, SelectorService
+from ..sparse import resilience
 from ..sparse.resilience import Deadline
 from .admission import BoundedQueue, EngineRequest
 from .slots import Slot, SlotTable
@@ -64,7 +65,10 @@ class ServingEngine:
                  slo_ms: Optional[float] = None,
                  backend: str = "jnp",
                  batching: bool = True,
-                 clock: Optional[Callable[[], float]] = None) -> None:
+                 clock: Optional[Callable[[], float]] = None,
+                 journal=None,
+                 checkpointer=None,
+                 checkpoint_every: int = 0) -> None:
         self.service = service
         self.clock = clock if clock is not None else time.monotonic
         self.queue = BoundedQueue(queue_max, soft_watermark)
@@ -77,12 +81,26 @@ class ServingEngine:
         self.deadline_ms = deadline_ms
         self.slo_ms = slo_ms
         self.backend = backend
+        # durability (DESIGN.md §15): WAL every submit/outcome through the
+        # journal, snapshot learned state every ``checkpoint_every`` ticks
+        # (and on clean shutdown) through the checkpointer
+        self.journal = journal
+        self.checkpointer = checkpointer
+        self.checkpoint_every = max(int(checkpoint_every), 0)
+        self._ticks = 0
+        # idempotency sets: rids currently inside the engine, and rids with
+        # a terminal outcome (seeded from the journal scan on recovery) —
+        # a duplicate submit of either is dropped, so no request can ever
+        # execute twice across incarnations
+        self._inflight: set = set()
+        self._terminal: set = set()
         self._metrics = default_registry().scope("engine")
         self._counts = CounterDict(self._metrics, (
             "submitted", "rejected", "admitted", "shed", "completed",
             "drains", "multi_request_drains", "drained_members",
             "resident_admits", "degrade_signals", "slo_attained",
-            "slo_missed"))
+            "slo_missed", "duplicate_submits", "drain_dedups",
+            "checkpoints"))
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -94,20 +112,39 @@ class ServingEngine:
 
     def submit(self, name: str, csr: CSR, x: Optional[np.ndarray] = None,
                deadline_ms: Optional[float] = None,
-               tenant: int = -1) -> bool:
+               tenant: int = -1, rid: Optional[str] = None) -> bool:
         """Offer one request. Returns False when the hard watermark
-        rejects it (backpressure) — the caller's signal to back off."""
+        rejects it (backpressure) — the caller's signal to back off.
+
+        ``rid`` is the idempotency key (DESIGN.md §15): callers that may
+        re-offer after a crash (journal replay, a re-driven trace) pass a
+        stable one; a rid already in flight or already terminal is dropped
+        as a duplicate (returns True — the request IS accounted for) so no
+        request can execute twice across incarnations."""
         now = self.clock()
+        rid = rid if rid else f"{name}#{int(self._counts['submitted'])}"
+        if rid in self._inflight or rid in self._terminal:
+            self._counts["duplicate_submits"] += 1
+            return True
         self._counts["submitted"] += 1
         ms = deadline_ms if deadline_ms is not None else self.deadline_ms
+        if self.journal is not None:
+            # WAL before admission: the journal record exists before the
+            # queue can accept (or reject) the request
+            self.journal.append_submit(rid, name, tenant=tenant,
+                                       deadline_ms=ms)
         req = EngineRequest(
             name, csr, x, t_enqueue=now,
             deadline=(Deadline.after_ms(ms, now=now) if ms is not None
                       else None),
-            tenant=tenant)
+            tenant=tenant, rid=rid)
         if not self.queue.push(req):
             self._counts["rejected"] += 1
+            self._terminal.add(rid)
+            if self.journal is not None:
+                self.journal.append_outcome(rid, "rejected")
             return False
+        self._inflight.add(rid)
         if self.queue.over_soft:
             # soft watermark: shed the verify sweep while the queue is
             # backed up — selection gets cheaper exactly under pressure
@@ -138,8 +175,17 @@ class ServingEngine:
         return admitted
 
     # ---------------------------------------------------------------- drain
+    def _terminal_outcome(self, er: EngineRequest, outcome: str) -> None:
+        """Tombstone one request: idempotency bookkeeping + WAL record."""
+        if er.rid:
+            self._inflight.discard(er.rid)
+            self._terminal.add(er.rid)
+        if self.journal is not None:
+            self.journal.append_outcome(er.rid, outcome)
+
     def _shed(self, er: EngineRequest) -> None:
         self._counts["shed"] += 1
+        self._terminal_outcome(er, "shed")
         obs_trace.emit("shed", er.name, reason="deadline")
 
     def _drain_one(self) -> int:
@@ -154,7 +200,14 @@ class ServingEngine:
         now = self.clock()
         live: List[Tuple[EngineRequest, Request, Decision]] = []
         for er, sreq, dec in slot.members:
-            if er.deadline is not None and er.deadline.exceeded(now):
+            if er.rid and er.rid in self._terminal:
+                # idempotency key on drain (defense-in-depth — submit
+                # already dedupes): a rid answered by an earlier
+                # incarnation's execution is never executed again; it
+                # counts completed so the ledger pairs with its admit
+                self._counts["drain_dedups"] += 1
+                self._counts["completed"] += 1
+            elif er.deadline is not None and er.deadline.exceeded(now):
                 self._shed(er)
             else:
                 live.append((er, sreq, dec))
@@ -175,6 +228,7 @@ class ServingEngine:
             lat_ms = (t_done - er.t_enqueue) * 1e3
             reg.observe(self._metrics.key("request_ms"), lat_ms)
             self._counts["completed"] += 1
+            self._terminal_outcome(er, "completed")
             if self.slo_ms is not None:
                 key = ("slo_attained" if lat_ms <= self.slo_ms
                        else "slo_missed")
@@ -186,11 +240,26 @@ class ServingEngine:
         return len(live)
 
     # ----------------------------------------------------------------- loop
+    def _crash_point(self, where: str) -> None:
+        """The ``crash`` fault site (DESIGN.md §15): simulated process
+        death between two ticks (or between admission and drain — the
+        mid-drain crash point). Raises ``SimulatedCrash`` (a BaseException)
+        so NOTHING below the run_with_restarts supervisor can absorb it."""
+        if resilience.fault_fired("crash", where):
+            raise resilience.SimulatedCrash(where)
+
     def tick(self) -> int:
         """One engine tick: admit a queue slice into slots, then drain one
         slot through one stacked launch. Returns requests completed."""
+        self._crash_point("tick")
         self._admit()
-        return self._drain_one()
+        self._crash_point("drain")
+        done = self._drain_one()
+        self._ticks += 1
+        if self.checkpointer is not None and self.checkpoint_every and \
+                self._ticks % self.checkpoint_every == 0:
+            self.checkpoint()
+        return done
 
     def drain_all(self, max_ticks: int = 100000) -> int:
         """Tick until the engine runs dry; returns total completed."""
@@ -225,6 +294,65 @@ class ServingEngine:
         self._stop.set()
         self._thread.join(timeout=timeout_s)
         self._thread = None
+
+    # ----------------------------------------------------- durability (§15)
+    def checkpoint(self) -> bool:
+        """Snapshot the full learned state through the checkpointer; a
+        failed save is counted (and absorbed by the checkpointer), never
+        raised — the previous checkpoint stays valid."""
+        if self.checkpointer is None:
+            return False
+        path = self.checkpointer.save(self, journal=self.journal)
+        if path is not None:
+            self._counts["checkpoints"] += 1
+        return path is not None
+
+    def close(self) -> None:
+        """Clean shutdown: stop the tick thread if running, snapshot once
+        more (checkpoint-on-clean-shutdown), and compact + fsync + close
+        the journal. Idempotent."""
+        self.stop()
+        if self.checkpointer is not None:
+            self.checkpoint()
+        if self.journal is not None:
+            self.journal.compact()
+            self.journal.close()
+
+    def export_state(self) -> Dict:
+        """The checkpoint payload body: tick counter, ledger counters, and
+        the service's learned state (quarantine with TTLs remaining,
+        retraining buffer, schedule cache, selector counters)."""
+        return {
+            "tick": int(self._ticks),
+            "counts": {k: int(v) for k, v in self._counts.items()},
+            "selector": self.service.export_state(),
+        }
+
+    def restore_state(self, payload: Dict) -> None:
+        """Rebuild from a checkpoint payload. Terminal counters restore
+        verbatim; ``admitted``/``submitted`` restore REDUCED to the
+        terminal history (``admitted = completed + shed``,
+        ``submitted = admitted + rejected``) because the journal replay
+        will re-submit the non-terminal suffix and re-count it once —
+        keeping ``admitted == completed + shed`` an exact identity inside
+        this incarnation's registry."""
+        if not isinstance(payload, dict):
+            return
+        counts = {k: int(v) for k, v in (payload.get("counts") or {}).items()
+                  if isinstance(v, (int, float))}
+        term = counts.get("completed", 0) + counts.get("shed", 0)
+        counts["admitted"] = term
+        counts["submitted"] = term + counts.get("rejected", 0)
+        for k, v in counts.items():
+            if k in self._counts:
+                self._counts[k] = v
+        self._ticks = int(payload.get("tick", 0) or 0)
+        self.service.restore_state(payload.get("selector") or {})
+
+    def seed_terminal(self, rids) -> None:
+        """Load the journal's terminal rid set (recovery): duplicates of
+        already-answered requests are dropped at submit AND at drain."""
+        self._terminal.update(str(r) for r in rids)
 
     # ------------------------------------------------------------ telemetry
     def reset_metrics(self) -> None:
@@ -273,4 +401,12 @@ class ServingEngine:
         for k in ("entries", "bytes_in_use", "evictions",
                   "eviction_pressure", "hit_rate"):
             out[f"prep_{k}"] = prep[k]
+        # durability ledger (DESIGN.md §15): WAL + checkpoint activity next
+        # to the request counters they make provable across restarts
+        if self.journal is not None:
+            for k, v in self.journal.telemetry().items():
+                out[f"journal_{k}"] = v
+        if self.checkpointer is not None:
+            for k, v in self.checkpointer.telemetry().items():
+                out[f"ckpt_{k}"] = v
         return ordered(out)

@@ -53,9 +53,12 @@ def replay(engine: ServingEngine, trace: Sequence[TraceRequest],
         while i < len(trace) and trace[i].t_s <= now:
             tr = trace[i]
             name, A = population[tr.tenant]
+            # rid = the trace name (unique per trace): a re-driven replay
+            # after a crash re-offers the whole trace and the engine's
+            # idempotency dedupe drops the already-answered suffix
             engine.submit(f"{tr.name}", A,
                           xs[tr.tenant] if xs is not None else None,
-                          tenant=tr.tenant)
+                          tenant=tr.tenant, rid=tr.name)
             i += 1
         if engine.backlog:
             engine.tick()

@@ -23,8 +23,11 @@ from ..core import PLATFORMS, ScheduleTuner, corpus
 from ..obs import Tracer, default_registry, install_tracer
 from ..selector import ScheduleCache, SelectorService
 from ..sparse import PreparedStore, resilience
+from .checkpoint import EngineCheckpoint
 from .engine import ServingEngine
-from .replay import replay
+from .journal import RequestJournal, reconcile
+from .replay import replay, tenant_rhs
+from .supervisor import run_with_restarts
 from .trace_gen import generate_trace, tenant_population
 
 
@@ -61,6 +64,16 @@ def main(argv: Optional[list] = None) -> dict:
                     help="PreparedStore byte budget in MB (pressure runs)")
     ap.add_argument("--fault-rate", type=float, default=0.0)
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="durable serving (DESIGN.md §15): write-ahead "
+                         "request journal + engine checkpoints here and "
+                         "run the replay under the run_with_restarts "
+                         "supervisor")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="snapshot learned state every N engine ticks "
+                         "(plus once on clean shutdown)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restart budget of the crash supervisor")
     ap.add_argument("--trace-out", default=None, metavar="TRACE_JSON",
                     help="write Chrome-trace JSON + sibling .jsonl here")
     ap.add_argument("--metrics-out", default=None, metavar="METRICS_JSON")
@@ -82,17 +95,29 @@ def main(argv: Optional[list] = None) -> dict:
     print(f"tuner fit: {args.train_mats} mats, "
           f"{tuner.fit_simulations_} simulations, {time.time() - t0:.1f}s")
 
-    store = (PreparedStore(byte_budget=int(args.store_budget_mb * 2**20))
-             if args.store_budget_mb else PreparedStore())
-    svc = SelectorService(tuner, cache=ScheduleCache(), prepared_store=store)
-    engine = ServingEngine(svc, queue_max=args.queue_max,
-                           admit_max=args.admit_max, slot_max=args.slot_max,
-                           deadline_ms=args.deadline_ms, slo_ms=args.slo_ms,
-                           batching=not args.no_batching)
     population = tenant_population(args.tenants, n_min=args.n_min,
                                    n_max=args.n_max, seed=args.seed + 500)
     offered = generate_trace(args.requests, args.qps, args.tenants,
                              a=args.zipf_a, seed=args.seed)
+
+    def build_engine():
+        store = (PreparedStore(byte_budget=int(args.store_budget_mb * 2**20))
+                 if args.store_budget_mb else PreparedStore())
+        svc = SelectorService(tuner, cache=ScheduleCache(),
+                              prepared_store=store)
+        journal = checkpointer = None
+        if args.checkpoint_dir:
+            journal = RequestJournal(
+                os.path.join(args.checkpoint_dir, "journal"))
+            checkpointer = EngineCheckpoint(args.checkpoint_dir)
+        return ServingEngine(svc, queue_max=args.queue_max,
+                             admit_max=args.admit_max,
+                             slot_max=args.slot_max,
+                             deadline_ms=args.deadline_ms,
+                             slo_ms=args.slo_ms,
+                             batching=not args.no_batching,
+                             journal=journal, checkpointer=checkpointer,
+                             checkpoint_every=args.checkpoint_every)
 
     inj = None
     if args.fault_rate > 0:
@@ -100,8 +125,39 @@ def main(argv: Optional[list] = None) -> dict:
             resilience.FaultInjector(args.fault_rate, seed=args.fault_seed))
         print(f"fault injector: rate {args.fault_rate} seed {args.fault_seed}")
 
-    rep = replay(engine, offered, population, rhs_seed=args.seed,
-                 execute=not args.no_execute)
+    if args.checkpoint_dir:
+        # durable path (DESIGN.md §15): the whole replay runs under the
+        # restart supervisor — crashes restore the newest checkpoint,
+        # replay the journal suffix, and re-drive the (idempotent) trace
+        xs = tenant_rhs(population, seed=args.seed) \
+            if not args.no_execute else None
+
+        def resolve(rec):
+            t = int(rec.get("tenant", -1))
+            if 0 <= t < len(population):
+                return population[t][1], (xs[t] if xs is not None else None)
+            return None
+
+        summary = run_with_restarts(
+            build_engine,
+            lambda engine, attempt: replay(engine, offered, population,
+                                           rhs_seed=args.seed,
+                                           execute=not args.no_execute),
+            resolve=resolve, max_restarts=args.max_restarts)
+        rep = summary.pop("result")
+        rep.update({f"recovery_{k}": float(v) for k, v in summary.items()})
+        scan = RequestJournal(
+            os.path.join(args.checkpoint_dir, "journal")).scan()
+        ledger = reconcile(scan)
+        print(f"durable: restarts {summary['restarts']:.0f}  replayed "
+              f"{summary['replayed']:.0f}  dropped_corrupt "
+              f"{summary['dropped_corrupt']:.0f}  mttr "
+              f"{summary['mttr_ms']:.1f}ms")
+        print("journal ledger: " + "  ".join(
+            f"{k} {v:.0f}" for k, v in ledger.items()))
+    else:
+        rep = replay(build_engine(), offered, population, rhs_seed=args.seed,
+                     execute=not args.no_execute)
     if inj is not None:
         rep.update(inj.telemetry())
         resilience.install_injector(None)

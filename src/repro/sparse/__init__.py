@@ -34,9 +34,9 @@ from .prepared import (PreparedStore, bucket_edge, content_key,
 from .registry import OpSpec, get_op, list_ops, register_op
 from .resilience import (FALLBACK_CHAIN, Deadline, FaultInjector,
                          GuardedExecutor, InjectedFault, Quarantine,
-                         default_executor, default_quarantine,
-                         install_injector, register_dense_ref,
-                         reset_resilience, with_backoff)
+                         SimulatedCrash, default_executor,
+                         default_quarantine, install_injector,
+                         register_dense_ref, reset_resilience, with_backoff)
 from .tensor import (LAYOUT_FIELDS, ShardedMeta, ShardedSparseTensor,
                      SparseMeta, SparseTensor)
 
@@ -44,8 +44,9 @@ __all__ = [
     "Delta", "FALLBACK_CHAIN", "Deadline", "FaultInjector",
     "GuardedExecutor", "InjectedFault", "LAYOUT_FIELDS", "MutableMatrix",
     "OpSpec", "Plan", "PreparedStore", "Quarantine", "RowPartition",
-    "ShardedMeta", "ShardedSparseTensor", "SlackOverflow", "SparseMeta",
-    "SparseTensor", "bounds_imbalance", "bucket_edge", "content_key",
+    "ShardedMeta", "ShardedSparseTensor", "SimulatedCrash", "SlackOverflow",
+    "SparseMeta", "SparseTensor", "bounds_imbalance", "bucket_edge",
+    "content_key",
     "default_executor", "default_quarantine", "get_op", "install_injector",
     "launch_count", "list_ops", "moe_tile_schedule", "partition_rows",
     "plan", "plan_bucket", "plan_sharded", "raw_content_key",

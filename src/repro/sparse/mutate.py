@@ -35,10 +35,13 @@ in-place rekey (forcing an epoch swap) and ``slack-overflow`` simulates
 rung-3 exhaustion; both are recovered by the swap, keeping the chaos-gate
 identity ``fired == recovered``.
 
-Caveat: a q<1 ELL schedule truncates tail blocks out of the container; a
-delta touching a truncated position is indistinguishable from an insert
-and lands in slack with only the delta's values. Mutable matrices should
-use full-quantile schedules (the defaults do).
+A q<1 ELL schedule truncates tail blocks out of an immutable container;
+for mutable tensors that would make a delta touching a truncated position
+indistinguishable from an insert — it would land in slack with only the
+delta's values, silently dropping the base values. ``from_csr`` therefore
+forces full-quantile prep (``full_rows=True``) whenever ``slack > 0``: a
+mutable container always holds every block, regardless of the schedule's
+``ell_quantile``.
 """
 from __future__ import annotations
 

@@ -62,8 +62,15 @@ FALLBACK_CHAIN = ("pallas", "interpret", "jnp", "dense")
 # fast path (recovery = the epoch-swap rebuild), ``slack-overflow``
 # simulates an exhausted slack reservation (recovery = same swap), so the
 # chaos gate's ``fired == recovered`` identity covers dynamic sparsity.
+# The three durability sites (DESIGN.md §15): ``journal-append`` fails one
+# WAL record write (recovery = count + keep serving, durability degraded),
+# ``checkpoint-write`` fails a checkpoint save (recovery = previous
+# checkpoint stays valid), and ``crash`` simulates process death between
+# two engine ticks (recovery = the run_with_restarts supervisor restores
+# the newest checkpoint and replays the journal suffix).
 SITES = ("prep", "launch", "cache-read", "cache-write", "store-evict",
-         "shard-dispatch", "delta-apply", "slack-overflow")
+         "shard-dispatch", "delta-apply", "slack-overflow",
+         "journal-append", "checkpoint-write", "crash")
 
 
 class InjectedFault(RuntimeError):
@@ -79,6 +86,18 @@ class InjectedFault(RuntimeError):
 class NonFiniteOutput(RuntimeError):
     """A guarded launch produced NaN/Inf output (treated as a launch
     failure: quarantine the combo and re-execute one rung down)."""
+
+
+class SimulatedCrash(BaseException):
+    """Simulated process death (the ``crash`` fault site, fired between two
+    engine ticks). Derives from BaseException ON PURPOSE: nothing in the
+    guarded ladder, the retry/backoff shape, or the engine may absorb it —
+    only the ``run_with_restarts`` supervisor catches it, exactly as a real
+    ``kill -9`` would only be survived by a process supervisor."""
+
+    def __init__(self, where: str = "") -> None:
+        super().__init__(f"simulated crash{f' at {where}' if where else ''}")
+        self.where = where
 
 
 # Failure classes the guard absorbs. ValueError/TypeError stay fatal on
@@ -293,6 +312,63 @@ class Quarantine:
 
     def clear(self) -> None:
         self._entries.clear()
+
+    # ------------------------------------------------------ durability (§15)
+    def export_state(self) -> List[Dict]:
+        """JSON-ready entries with TTLs in *ticks remaining*, never absolute
+        tick numbers: a restored incarnation starts its tick counter at 0,
+        so persisting ``expires_tick`` verbatim would expire every entry
+        immediately (late entries) or pin them forever (early ones)."""
+        out: List[Dict] = []
+        for v in self._entries.values():
+            sched = v["schedule"]
+            out.append({
+                "op": v["op"], "backend": v["backend"],
+                "schedule": (dataclasses.asdict(sched)
+                             if dataclasses.is_dataclass(sched)
+                             else {"repr": str(sched)}),
+                "reason": v["reason"],
+                "ttl_remaining": (None if v["expires_tick"] is None
+                                  else max(int(v["expires_tick"])
+                                           - self._tick, 0)),
+            })
+        return out
+
+    def restore_state(self, entries: Sequence[Dict]) -> int:
+        """Rebuild entries from :meth:`export_state` output against THIS
+        incarnation's tick counter (``expires = now + ttl_remaining``).
+        Malformed entries are skipped, never raised; returns the number
+        restored. Restored entries do not re-count ``entered`` — the
+        checkpointed counter snapshot already carries that history."""
+        from ..core.autotune import Schedule
+        n = 0
+        for e in entries:
+            if not isinstance(e, dict):
+                continue
+            sd = e.get("schedule")
+            if not isinstance(sd, dict) or "backend" not in sd:
+                continue
+            try:
+                sched = Schedule(
+                    backend=str(sd["backend"]),
+                    block_size=int(sd.get("block_size", 128)),
+                    ell_quantile=float(sd.get("ell_quantile", 1.0)),
+                    layout=str(sd.get("layout", "ell")),
+                    slice_height=int(sd.get("slice_height", 0)),
+                    n_rhs=int(sd.get("n_rhs", 1)))
+                op, backend = str(e["op"]), str(e["backend"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            ttl = e.get("ttl_remaining")
+            self._entries[self._key(op, backend, sched)] = {
+                "op": op, "backend": backend, "schedule": sched,
+                "reason": str(e.get("reason", "restored")),
+                "entered_tick": self._tick,
+                "expires_tick": (None if ttl is None
+                                 else self._tick + int(ttl)),
+            }
+            n += 1
+        return n
 
     def telemetry(self) -> Dict[str, float]:
         return ordered({

@@ -122,9 +122,17 @@ class SparseTensor:
     def build_container(csr: CSR, schedule: Schedule, *,
                         layout: Optional[str] = None,
                         sigma: int = SELL_SIGMA,
-                        max_blocks: Optional[int] = None) -> HostLayout:
+                        max_blocks: Optional[int] = None,
+                        full_rows: bool = False) -> HostLayout:
         """Host-side container a ``Schedule`` names (the old ``prepare*``
-        family as one rule; kernels' shims delegate here)."""
+        family as one rule; kernels' shims delegate here).
+
+        ``full_rows=True`` ignores the schedule's ``ell_quantile`` cap and
+        keeps every block: mutable tensors (``slack > 0``) must not truncate
+        tail blocks, because a later delta touching a truncated position
+        would be indistinguishable from an insert and land in slack with
+        only the delta's values — silently dropping the base values.
+        """
         if schedule.backend == "dense":
             return csr.to_dense()
         if layout == "bsr":
@@ -134,7 +142,9 @@ class SparseTensor:
                                     max(schedule.slice_height, 1), sigma)
         bsr = BSR.from_csr(csr, schedule.block_size)
         mb = max_blocks
-        if mb is None and schedule.ell_quantile < 1.0:
+        if full_rows:
+            mb = None
+        elif mb is None and schedule.ell_quantile < 1.0:
             mb = ell_block_cap(bsr.blocks_per_row(), schedule.ell_quantile)
         return ELLBSR.from_bsr(bsr, mb)
 
@@ -176,7 +186,8 @@ class SparseTensor:
         if schedule is None:
             schedule = cls.default_schedule(block_size, layout, slice_height)
         container = cls.build_container(csr, schedule, layout=layout,
-                                        sigma=sigma, max_blocks=max_blocks)
+                                        sigma=sigma, max_blocks=max_blocks,
+                                        full_rows=slack > 0)
         spare: list = []
         if slack > 0 and isinstance(container, (ELLBSR, SELLBSR)):
             from .mutate import reserve_slack

@@ -161,6 +161,44 @@ def test_slack_exhaustion_epoch_swaps_never_fails():
     assert tel["epoch_swaps"] >= 1 and tel["rebuilds"] >= 1
 
 
+def test_quantile_schedule_mutable_prep_keeps_truncated_positions():
+    """PR 9's known limit, closed: a q<1 ELL schedule must NOT truncate a
+    mutable container's tail blocks — a delta on a truncated position used
+    to land in slack with only the delta's values, silently dropping the
+    base values. ``from_csr(slack>0)`` now forces full-quantile prep."""
+    from repro.core.autotune import Schedule
+    rng = np.random.default_rng(6)
+    n, bs = 64, 8
+    d = (rng.random((n, n)) < 0.04) * rng.standard_normal((n, n))
+    d[0, :] = rng.standard_normal(n)     # one long row the cap would cut
+    A = CSR.from_dense(d.astype(np.float32))
+    sched = Schedule("jax", bs, 0.5)
+    x = rng.standard_normal(n).astype(np.float32)
+
+    # the mutable container holds every block despite q=0.5 ...
+    full_slots = SparseTensor.from_csr(
+        A, schedule=Schedule("jax", bs, 1.0)).to_host().block_cols.shape[1]
+    trunc = SparseTensor.from_csr(A, schedule=sched)
+    mutable = SparseTensor.from_csr(A, schedule=sched, slack=2)
+    assert trunc.to_host().block_cols.shape[1] < full_slots
+    assert mutable.to_host().block_cols.shape[1] == full_slots + 2
+
+    # ... so an "add" delta on a would-be-truncated position accumulates
+    # onto the base value instead of replacing it
+    store = PreparedStore()
+    mm = MutableMatrix(A, store=store, slack=2)
+    p = plan("spmv", (A,), schedule=sched, store=store)
+    np.testing.assert_allclose(np.asarray(p.execute(x)),
+                               np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+    col = int(A.col_idxs[A.row_ptrs[0]:A.row_ptrs[1]][-1])   # row 0 tail
+    mm.add_values([0], [col], np.asarray([2.5], np.float32))
+    y = np.asarray(plan("spmv", (A,), schedule=sched,
+                        store=store).execute(x))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x,
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_bsr_tensor_rejects_structural_insert():
     rng = np.random.default_rng(4)
     A = _random_csr(rng, n=32, density=0.05)
